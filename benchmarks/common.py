@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: timing, graph staging, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import gcn_normalize
+from repro.core.spmm import make_accel_spmm
+from repro.data.graphs import BENCHMARK_GRAPHS, make_power_law_graph
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (us) of a jitted call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def staged_graph(name: str, budget_edges: int = 400_000, seed: int = 0):
+    """A Table-I analogue scaled to a CPU-friendly edge budget.
+
+    Returns (normalized CSRGraph, scale_applied)."""
+    n_full, e_full, sc = BENCHMARK_GRAPHS[name]
+    e_target = int(e_full * sc)
+    scale = min(1.0, budget_edges / e_target)
+    n = max(100, int(n_full * scale))
+    e = max(200, int(e_target * scale))
+    g = gcn_normalize(make_power_law_graph(n, e, seed=seed))
+    return g, scale
+
+
+def csv_row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,51 @@
+"""The paper's technique applied beyond GCNs: MoE expert dispatch.
+
+Token->expert routing is a sparse aggregation with power-law "degrees"
+(expert loads). This demo shows the Accel-GCN recipe working on it:
+degree sorting (sort tokens by expert), block-level partition (fixed
+128-row blocks, one metadata word each), combined warp (128-lane tiles in
+the Pallas grouped GEMM) — and that the result is dropless and balanced
+even under pathological routing skew.
+
+    PYTHONPATH=src python examples/moe_block_dispatch.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.moe import init_moe, moe_block, moe_capacity
+
+
+def main():
+    B, T, D, FF, E, k = 2, 128, 64, 128, 8, 2
+    p = init_moe(jax.random.PRNGKey(0), D, FF, E, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, D))
+
+    for name, bias in [("balanced routing", 0.0), ("skewed routing", 8.0)]:
+        p2 = dict(p)
+        p2["router"] = p["router"] + jnp.zeros((E,)).at[0].set(bias)
+        # expert loads = the "degree distribution" of this sparse problem
+        logits = (x.reshape(-1, D) @ p2["router"])
+        ids = jax.lax.top_k(jax.nn.softmax(logits, -1), k)[1].reshape(-1)
+        loads = np.bincount(np.asarray(ids), minlength=E)
+        print(f"\n== {name}: expert loads {loads.tolist()} "
+              f"(max/mean={loads.max()/loads.mean():.1f}x) ==")
+
+        y_blk, _ = moe_block(p2, x, top_k=k, n_experts=E, m_tile=16,
+                             use_pallas=True)
+        y_ref, _ = moe_capacity(p2, x, top_k=k, n_experts=E,
+                                capacity_factor=16.0)  # effectively dropless
+        y_cap, _ = moe_capacity(p2, x, top_k=k, n_experts=E,
+                                capacity_factor=1.25)
+        print(f"block dispatch (paper technique) vs dropless oracle: "
+              f"max|err|={float(jnp.abs(y_blk - y_ref).max()):.2e}  <- dropless")
+        print(f"capacity-1.25 dispatch vs dropless oracle:           "
+              f"max|err|={float(jnp.abs(y_cap - y_ref).max()):.2e}  "
+              f"<- drops under skew")
+        nb = (T * B * k + E * 16) // 16
+        print(f"metadata: one int32 per block (~{nb} blocks) — "
+              f"the analogue of the paper's 128-bit block records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end driver: train a GCN with the Accel-GCN aggregation operator.
+
+    PYTHONPATH=src python examples/train_gcn.py --preset tiny   # seconds
+    PYTHONPATH=src python examples/train_gcn.py --preset 100m   # ~100M params
+
+The 100m preset is the deliverable-(b) driver: a ~100M-parameter GCN trained
+for a few hundred steps on a synthetic power-law graph, with checkpointing
+and the fault-tolerant loop.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.graph import gcn_normalize
+from repro.data.graphs import make_power_law_graph, node_features, node_labels
+from repro.models.gcn import GraphOp, gcn_loss, init_gcn
+
+PRESETS = {
+    # name: (nodes, edges, dims, classes, steps)
+    "tiny": (2_000, 12_000, [64, 128, 16], 16, 60),
+    "25m": (8_000, 64_000, [1024, 2048, 2048, 2048, 2048, 256], 256, 200),
+    "100m": (5_000, 40_000, [1024] + [4096] * 7 + [256], 256, 300),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=PRESETS)
+    ap.add_argument("--variant", default="gcn", choices=["gcn", "sage", "gin"])
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    n, e, dims, classes, steps = PRESETS[args.preset]
+    steps = args.steps or steps
+    print(f"[train_gcn] graph: {n} nodes / {e} edges; dims={dims}+[{classes}]")
+    g = gcn_normalize(make_power_law_graph(n, e, seed=0))
+    aggr = GraphOp.build(g, backend="blocked")
+    X = jnp.asarray(node_features(n, dims[0], 0))
+    y = jnp.asarray(node_labels(n, classes, 0))
+
+    params = init_gcn(jax.random.PRNGKey(0), dims + [classes], args.variant)
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree_util.tree_leaves(params))
+    print(f"[train_gcn] {n_params/1e6:.1f}M parameters, {steps} steps")
+
+    loss_fn = jax.jit(lambda p: gcn_loss(p, aggr, X, y, args.variant))
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p: gcn_loss(p, aggr, X, y, args.variant)))
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    t0 = time.perf_counter()
+    for s in range(steps):
+        l, grads = grad_fn(params)
+        params = jax.tree.map(lambda p, gr: p - args.lr * gr, params, grads)
+        if s % 20 == 0 or s == steps - 1:
+            dt = time.perf_counter() - t0
+            print(f"  step {s:4d} loss={float(l):.4f} ({dt:.1f}s)")
+        if ckpt and (s + 1) % 100 == 0:
+            ckpt.save(s + 1, params)
+    print(f"[train_gcn] final loss {float(loss_fn(params)):.4f} "
+          f"in {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

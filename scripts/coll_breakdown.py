@@ -1,0 +1,82 @@
+"""Diagnose: where do collective bytes come from? Groups HLO collective ops
+by (kind, dtype, source op_name prefix) for one probe cell.
+
+    PYTHONPATH=src python scripts/coll_breakdown.py --arch dbrx-132b \
+        --shape train_4k [--variant bf16_attn]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+import sys
+from collections import defaultdict
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+LINE_RE = re.compile(
+    r"=\s+(\(?[a-z0-9#,\[\]{}() ]+?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+NAME_RE = re.compile(r'op_name="([^"]*)"')
+BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--layers", type=int, default=2)
+    args = ap.parse_args()
+
+    from hillclimb import VARIANTS, apply_flags  # same dir
+    apply_flags(VARIANTS[args.variant])
+
+    from repro.configs import SHAPES_BY_NAME, get_config
+    from repro.launch.dryrun import lower_and_compile
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(args.arch).replace(n_layers=args.layers)
+    shape = SHAPES_BY_NAME[args.shape]
+    mesh = make_production_mesh(multi_pod=False)
+    T = shape.seq_len
+    chunks = {"q_chunk": min(4096, T), "kv_chunk": min(4096, T),
+              "loss_chunk": min(4096, T), "ssd_chunk": 128}
+    _, compiled, dt = lower_and_compile(cfg, shape, mesh, chunks=chunks,
+                                        unroll=True)
+    txt = compiled.as_text()
+    agg = defaultdict(int)
+    for line in txt.splitlines():
+        m = LINE_RE.search(line)
+        if not m or m.group(3) == "-done":
+            continue
+        kind = m.group(2)
+        total = 0
+        dtype = "?"
+        for sm in SHAPE_RE.finditer(m.group(1)):
+            dtype = sm.group(1)
+            n = 1
+            for d in (sm.group(2).split(",") if sm.group(2) else []):
+                n *= int(d)
+            total += n * BYTES.get(dtype, 0)
+        nm = NAME_RE.search(line)
+        src = "?"
+        if nm:
+            parts = nm.group(1).split("/")
+            keep = [p for p in parts if not p.startswith(("jit", "jvp", "transpose",
+                                                          "closed_call",
+                                                          "checkpoint",
+                                                          "rematted"))]
+            src = "/".join(keep[:3]) or parts[-1]
+        agg[(kind, dtype, src)] += total
+    rows = sorted(agg.items(), key=lambda kv: -kv[1])[:25]
+    print(f"# {args.arch} x {args.shape} x {args.variant} "
+          f"({args.layers} layers, unrolled) compile={dt:.0f}s")
+    for (kind, dtype, src), b in rows:
+        print(f"{b/1e9:10.3f} GB  {kind:18s} {dtype:5s} {src}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+benchmarks/results/dryrun.json."""
+import json
+import sys
+
+HW_NOTE = "TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI; 16 GB HBM/chip"
+
+
+def human(n):
+    if n is None:
+        return "-"
+    for unit in ("", "K", "M", "G", "T", "P", "E"):
+        if abs(n) < 1000:
+            return f"{n:.3g}{unit}"
+        n /= 1000
+    return f"{n:.3g}Z"
+
+
+def main(path="benchmarks/results/dryrun.json"):
+    recs = json.load(open(path))
+    recs.sort(key=lambda r: (r["arch"], r["shape"]))
+
+    print("### §Dry-run table (per-device memory analysis; both meshes)\n")
+    print(f"_{HW_NOTE}_\n")
+    print("| arch | shape | mesh | compile s | args GB/dev | temp GB/dev | "
+          "rolled coll B/dev | fits 16GB? |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        cell = f"{r['arch']} | {r['shape']}"
+        if "skipped" in r:
+            print(f"| {cell} | — | — | — | — | — | SKIP: {r['skipped']} |")
+            continue
+        if "error" in r:
+            print(f"| {cell} | — | — | — | — | — | ERROR |")
+            continue
+        for mesh in ("pod16x16", "multipod2x16x16"):
+            m = r.get(mesh)
+            if not m:
+                continue
+            tot = (m["argument_bytes_per_dev"] + m["temp_bytes_per_dev"]) / 1e9
+            fits = "yes" if tot < 16 else f"no ({tot:.0f}GB)"
+            print(f"| {cell} | {mesh} | {m['compile_s']:.1f} | "
+                  f"{m['argument_bytes_per_dev']/1e9:.2f} | "
+                  f"{m['temp_bytes_per_dev']/1e9:.2f} | "
+                  f"{human(m['rolled_cost']['coll'])} | {fits} |")
+
+    print("\n### §Roofline table (single-pod 16x16; probe-extrapolated)\n")
+    print("| arch | shape | compute s | memory s | collective s | bottleneck | "
+          "MODEL_FLOPS | useful ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if "skipped" in r or "error" in r or "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4g} | "
+              f"{rl['memory_s']:.4g} | {rl['collective_s']:.4g} | "
+              f"**{rl['bottleneck']}** | {human(rl['model_flops'])} | "
+              f"{rl['useful_ratio']:.3f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,101 @@
+"""Fault-tolerant checkpointing: atomic, keep-k, mesh-independent.
+
+Design (DESIGN.md §6):
+* checkpoints are written to ``<dir>/step_<n>.tmp`` then atomically renamed,
+  so a preempted writer never corrupts the latest checkpoint;
+* arrays are saved *unsharded-logical* (gathered host-side), so a restart may
+  use a different mesh/data-axis extent (elastic scaling) — resharding
+  happens on load via the caller's shardings;
+* ``latest_step`` scans for complete checkpoints only; the training loop
+  restarts from there after any failure (crash-consistency is the rename).
+
+Format: one ``.npz`` per checkpoint + a msgpack manifest of the pytree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # -- paths ---------------------------------------------------------------
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "MANIFEST.json")):
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree: Any) -> str:
+        final = self._path(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves, treedef = _flatten(tree)
+        arrs = {}
+        dtypes = []
+        for i, leaf in enumerate(leaves):
+            a = np.asarray(jax.device_get(leaf))
+            dtypes.append(a.dtype.name)
+            if a.dtype.name == "bfloat16":   # npz can't store bf16
+                a = a.astype(np.float32)
+            arrs[f"a{i}"] = a
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrs)
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump({"step": step, "n_leaves": len(leaves),
+                       "dtypes": dtypes,
+                       "treedef": str(treedef)}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)      # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1)) for name in os.listdir(self.dir)
+            if (m := re.fullmatch(r"step_(\d+)", name)))
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._path(s), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """Restore into the structure of ``like`` (reshard via ``shardings``)."""
+        path = self._path(step)
+        with open(os.path.join(path, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        leaves, treedef = _flatten(like)
+        assert manifest["n_leaves"] == len(leaves), "checkpoint/model mismatch"
+        out = []
+        sh_leaves = (jax.tree_util.tree_leaves(shardings)
+                     if shardings is not None else [None] * len(leaves))
+        import ml_dtypes  # registered by jax; provides bfloat16 numpy dtype
+        for i, (leaf, sh) in enumerate(zip(leaves, sh_leaves)):
+            a = data[f"a{i}"]
+            want = manifest["dtypes"][i]
+            a = a.astype(ml_dtypes.bfloat16 if want == "bfloat16" else want)
+            out.append(jax.device_put(a, sh) if sh is not None else jax.numpy.asarray(a))
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,2 @@
+from .graphs import make_power_law_graph, BENCHMARK_GRAPHS, make_benchmark_graph  # noqa: F401
+from .tokens import token_batch_fn  # noqa: F401

@@ -1,0 +1,88 @@
+"""Jit'd wrappers around the Pallas kernels + portable jnp twins.
+
+Every kernel has three callables:
+  * ``*_pallas``  — the Pallas kernel (interpret=True on CPU, compiled on TPU)
+  * ``*_blocked`` — a pure-jnp twin with the *same* slab layout and math
+                    (the portable production path; XLA fuses it well)
+  * oracle        — in ref.py (layout-free ground truth)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .spmm_accel import spmm_block_slabs
+from .spmm_hbm import spmm_block_slabs_hbm
+from .grouped_matmul import grouped_matmul
+
+__all__ = ["spmm_pallas", "spmm_pallas_hbm", "spmm_blocked",
+           "grouped_matmul_pallas", "grouped_matmul_blocked"]
+
+
+def spmm_pallas(slabs, x, n_rows, *, interpret=True):
+    return spmm_block_slabs(
+        slabs["colidx"], slabs["values"], slabs["rowloc"], slabs["out_row"],
+        x, n_rows, interpret=interpret,
+    )
+
+
+def spmm_pallas_hbm(slabs, x, n_rows, *, interpret=True):
+    """HBM-resident X variant (double-buffered DMA gather) for graphs whose
+    feature tile exceeds VMEM."""
+    return spmm_block_slabs_hbm(
+        slabs["colidx"], slabs["values"], slabs["rowloc"], slabs["out_row"],
+        x, n_rows, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "block_chunk"))
+def spmm_blocked(colidx, values, rowloc, out_row, x, n_rows, block_chunk: int = 1024):
+    """jnp twin of the Pallas kernel: identical slab math, chunked over blocks
+    to bound the gathered-intermediate footprint (the VMEM analogue)."""
+    B, C = colidx.shape
+    R = out_row.shape[1]
+    F = x.shape[1]
+    bc = min(block_chunk, B) if B else 1
+    Bp = ((B + bc - 1) // bc) * bc if B else bc
+    pad = Bp - B
+
+    def padded(a, fill):
+        return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1), constant_values=fill)
+
+    ci = padded(colidx, 0).reshape(-1, bc, C)
+    va = padded(values, 0).reshape(-1, bc, C)
+    rl = padded(rowloc, R - 1).reshape(-1, bc, C)
+
+    def chunk_fn(args):
+        ci_c, va_c, rl_c = args
+        gathered = va_c[..., None].astype(jnp.float32) * x[ci_c].astype(jnp.float32)
+        onehot = jax.nn.one_hot(rl_c, R, dtype=jnp.float32)
+        return jnp.einsum("bcr,bcf->brf", onehot, gathered)
+
+    slab_out = jax.lax.map(chunk_fn, (ci, va, rl))          # [nc, bc, R, F]
+    flat = slab_out.reshape(Bp * R, F)[: B * R]
+    seg = out_row.reshape(B * R)
+    out = jax.ops.segment_sum(flat, seg, num_segments=n_rows + 1)
+    return out[:n_rows]
+
+
+def grouped_matmul_pallas(x, w, block_expert, *, interpret=True, **tiles):
+    return grouped_matmul(x, w, block_expert, interpret=interpret, **tiles)
+
+
+@functools.partial(jax.jit, static_argnames=("m_tile",))
+def grouped_matmul_blocked(x, w, block_expert, m_tile: int = 128):
+    """jnp twin: per-block dynamic weight pick + dense matmul, scanned."""
+    M, K = x.shape
+    nb = M // m_tile
+    xb = x.reshape(nb, m_tile, K)
+
+    def step(_, args):
+        xt, e = args
+        return None, jnp.dot(xt.astype(jnp.float32), w[e].astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+
+    _, out = jax.lax.scan(step, None, (xb, block_expert))
+    return out.reshape(M, -1)

@@ -1,0 +1,115 @@
+"""Accel-GCN SpMM as a Pallas TPU kernel.
+
+TPU mapping of the paper's design (DESIGN.md §2):
+
+* one grid step == one *block* of the block-level partition: a fixed-capacity
+  slab of ``C = deg_bound`` non-zeros covering up to ``R`` contiguous
+  (degree-sorted) output rows;
+* the dense feature dimension is tiled at 128 lanes and iterated by a second
+  grid axis — the *combined warp*: every HBM<->VMEM transfer of a dense row is
+  a full-lane contiguous vector;
+* the intra-block segment reduction (the paper's shared-memory
+  ``atomicAdd_block``) becomes a one-hot MXU matmul ``[R, C] @ [C, F_tile]``
+  entirely in VMEM — no atomics exist or are needed;
+* cross-block accumulation for split rows (degree > C) is a segment-sum
+  epilogue over the packed block outputs (TPU grids are sequential, so a
+  revisit-accumulate output alias is also legal; see ops.py notes).
+
+VMEM budget per grid step (f32, defaults C=256, R=64, F_tile=128):
+  x slab        [C, F_tile]   128 KiB   (gather staging, scratch)
+  out slab      [R, F_tile]    32 KiB
+  colidx/values/rowloc [C]      3 KiB
+  one-hot       [C, R]         64 KiB
+  X feature tile [N_pad, F_tile] — resident path; for N_pad <= 4096 this is
+  <= 2 MiB and fits comfortably; larger graphs use the row-window variant
+  (``num_windows > 1``) which streams X in row windows and accumulates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_F_TILE = 128  # lane width — the "combined warp" quantum on TPU
+
+
+def _spmm_kernel(colidx_ref, values_ref, rowloc_ref, x_ref, out_ref, *, C, R):
+    """One block x one feature tile.
+
+    colidx_ref: int32[1, C]; values_ref: f32[1, C]; rowloc_ref: int32[1, C]
+    x_ref: [N_pad, F_tile] feature tile (VMEM resident)
+    out_ref: [1, R, F_tile]
+    """
+    cols = colidx_ref[0, :]                      # [C]
+    vals = values_ref[0, :].astype(jnp.float32)  # [C]
+    rloc = rowloc_ref[0, :]                      # [C]
+
+    # Gather C dense rows from the feature tile. On TPU this lowers to C
+    # dynamic VMEM reads of one (8x128-aligned) row each; lanes are fully
+    # coalesced because the feature tile is the minor dimension.
+    gathered = x_ref[cols, :].astype(jnp.float32)            # [C, F_tile]
+    gathered = gathered * vals[:, None]
+
+    # Intra-block segment reduction as a one-hot MXU matmul (replaces
+    # shared-memory atomics). Padding slots carry value 0 so their one-hot
+    # row contributes nothing.
+    onehot = (rloc[None, :] == jax.lax.broadcasted_iota(jnp.int32, (R, C), 0)
+              ).astype(jnp.float32)                          # [R, C]
+    out_ref[0, :, :] = jax.lax.dot_general(
+        onehot, gathered, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rows", "interpret", "f_tile"),
+)
+def spmm_block_slabs(
+    colidx: jax.Array,   # int32[B, C]
+    values: jax.Array,   # f32[B, C]
+    rowloc: jax.Array,   # int32[B, C]
+    out_row: jax.Array,  # int32[B, R]
+    x: jax.Array,        # [N, F]
+    n_rows: int,
+    *,
+    f_tile: int = DEFAULT_F_TILE,
+    interpret: bool = True,
+) -> jax.Array:
+    """Run the Accel-GCN SpMM kernel over packed slabs; returns [n_rows, F]."""
+    B, C = colidx.shape
+    R = out_row.shape[1]
+    N, F = x.shape
+
+    # Combined-warp alignment: pad F to the lane width (paper's pad-to-32,
+    # scaled to TPU's 128 lanes), pad N to sublane multiple.
+    F_pad = max(f_tile, ((F + f_tile - 1) // f_tile) * f_tile)
+    N_pad = ((N + 7) // 8) * 8
+    x_p = jnp.zeros((N_pad, F_pad), x.dtype).at[:N, :F].set(x)
+    nf = F_pad // f_tile
+
+    grid = (B, nf)
+    out_slabs = pl.pallas_call(
+        functools.partial(_spmm_kernel, C=C, R=R),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, C), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, C), lambda b, j: (b, 0)),
+            pl.BlockSpec((N_pad, f_tile), lambda b, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, R, f_tile), lambda b, j: (b, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, R, F_pad), jnp.float32),
+        interpret=interpret,
+    )(colidx, values, rowloc, x_p)
+
+    # Epilogue: scatter packed block rows to global rows. Non-split blocks
+    # write disjoint rows; split-row blocks accumulate here (sequential-grid
+    # revisit accumulation is the real-TPU alternative; see DESIGN.md §2).
+    flat = out_slabs.reshape(B * R, F_pad)
+    seg = out_row.reshape(B * R)
+    out = jax.ops.segment_sum(flat, seg, num_segments=n_rows + 1)
+    return out[:n_rows, :F]

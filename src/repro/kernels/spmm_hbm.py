@@ -1,0 +1,115 @@
+"""Accel-GCN SpMM — HBM-resident feature matrix variant.
+
+``spmm_accel.py`` keeps the feature tile VMEM-resident, which bounds the
+graph at N_pad x 128 x 4B <= ~2 MiB per tile (fine for layer-wise GCN
+batches, not for web-scale graphs). This variant keeps X in HBM
+(``memory_space=ANY``) and gathers the C rows a block needs with explicit
+double-buffered DMA — the TPU embedding-gather pattern, driven by the same
+block-partition metadata.
+
+Per grid step (C=256 defaults, f32):
+  row slabs (2 buffers)  2 x [8, F_tile]   8 KiB   (8-row DMA granularity)
+  gathered slab          [C, F_tile]     128 KiB
+  out slab               [R, F_tile]      <=32 KiB
+
+Validated in interpret mode against the same oracle as the resident-X
+kernel; on hardware the DMA issue loop overlaps the one-hot MXU matmul of
+the previous block (grid-level pipelining is left to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_F_TILE = 128
+
+
+def _kernel(colidx_ref, values_ref, rowloc_ref, x_hbm, out_ref,
+            gathered, row_buf, sem, *, C, R):
+    """colidx/values/rowloc: [1, C] VMEM; x_hbm: [N_pad, F_tile] ANY;
+    out_ref: [1, R, F_tile]; gathered: [C, F_tile] VMEM scratch;
+    row_buf: [2, 1, F_tile] VMEM scratch; sem: DMA semaphores [2]."""
+    cols = colidx_ref[0, :]
+    vals = values_ref[0, :].astype(jnp.float32)
+    rloc = rowloc_ref[0, :]
+
+    def issue(slot, k):
+        cp = pltpu.make_async_copy(
+            x_hbm.at[pl.ds(cols[k], 1), :],
+            row_buf.at[slot],
+            sem.at[slot],
+        )
+        cp.start()
+
+    def wait(slot, k):
+        cp = pltpu.make_async_copy(
+            x_hbm.at[pl.ds(cols[k], 1), :],
+            row_buf.at[slot],
+            sem.at[slot],
+        )
+        cp.wait()
+
+    # double-buffered gather: issue k+1 while storing k
+    issue(0, 0)
+
+    def body(k, _):
+        slot = jax.lax.rem(k, 2)
+        nxt = jax.lax.rem(k + 1, 2)
+
+        @pl.when(k + 1 < C)
+        def _pre():
+            issue(nxt, k + 1)
+
+        wait(slot, k)
+        gathered[pl.ds(k, 1), :] = row_buf[slot].astype(jnp.float32)
+        return ()
+
+    jax.lax.fori_loop(0, C, body, ())
+
+    g = gathered[...] * vals[:, None]
+    onehot = (rloc[None, :] == jax.lax.broadcasted_iota(jnp.int32, (R, C), 0)
+              ).astype(jnp.float32)
+    out_ref[0, :, :] = jax.lax.dot_general(
+        onehot, g, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "interpret", "f_tile"))
+def spmm_block_slabs_hbm(colidx, values, rowloc, out_row, x, n_rows,
+                         *, f_tile: int = DEFAULT_F_TILE, interpret: bool = True):
+    """HBM-gather SpMM over packed slabs; returns [n_rows, F] float32."""
+    B, C = colidx.shape
+    R = out_row.shape[1]
+    N, F = x.shape
+    F_pad = max(f_tile, ((F + f_tile - 1) // f_tile) * f_tile)
+    N_pad = ((N + 7) // 8) * 8
+    x_p = jnp.zeros((N_pad, F_pad), x.dtype).at[:N, :F].set(x)
+    nf = F_pad // f_tile
+
+    out_slabs = pl.pallas_call(
+        functools.partial(_kernel, C=C, R=R),
+        grid=(B, nf),
+        in_specs=[
+            pl.BlockSpec((1, C), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, C), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, C), lambda b, j: (b, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # X stays in HBM
+        ],
+        out_specs=pl.BlockSpec((1, R, f_tile), lambda b, j: (b, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, R, F_pad), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((C, f_tile), jnp.float32),
+            pltpu.VMEM((2, 1, f_tile), x_p.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(colidx, values, rowloc, x_p)
+
+    flat = out_slabs.reshape(B * R, F_pad)
+    seg = out_row.reshape(B * R)
+    out = jax.ops.segment_sum(flat, seg, num_segments=n_rows + 1)
+    return out[:n_rows, :F]

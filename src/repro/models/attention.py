@@ -1,0 +1,265 @@
+"""Attention: GQA with RoPE, sliding windows, logit soft-caps, KV caches.
+
+Three compute paths, all numerically equivalent where they overlap:
+
+* ``attention_forward``  — chunked online-softmax (flash-style) over KV
+  blocks; never materializes a [T, T] score matrix. Used for training and
+  prefill. Causality/windowing by masking.
+* ``banded_attention``   — sliding-window layers only: gathers a static
+  (window + q_chunk) KV band per query chunk, so compute is truly
+  sub-quadratic (used by gemma-2 local layers at long sequence).
+* ``attention_decode``   — single-token step against a static-size KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import PARAM_DTYPE, apply_rope, dense_init, rope_table, soft_cap
+
+NEG_INF = -2.3819763e38  # large negative, safe in fp32
+
+
+# Roofline probes unroll these chunk scans (see models/lm.py SCAN_UNROLL).
+SCAN_UNROLL = False
+
+# §Perf hillclimb lever: keep attention operands in bf16 and accumulate in
+# fp32 via preferred_element_type (MXU-native) instead of materializing fp32
+# copies of Q/K/V and the KV cache. Halves attention HBM traffic; numerics
+# validated in tests/test_attention.py (bf16 tolerance).
+BF16_EINSUMS = False
+
+
+def _score_dot(q, k, spec_q, spec_k, out_spec):
+    """einsum with fp32 accumulation; operands stay bf16 when BF16_EINSUMS."""
+    if BF16_EINSUMS:
+        return jnp.einsum(f"{spec_q},{spec_k}->{out_spec}", q, k,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum(f"{spec_q},{spec_k}->{out_spec}",
+                      q.astype(jnp.float32), k.astype(jnp.float32))
+
+
+def _scan(f, init, xs):
+    if SCAN_UNROLL:
+        n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        return jax.lax.scan(f, init, xs, unroll=max(int(n), 1))
+    return jax.lax.scan(f, init, xs)
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int, d_head: int,
+                   qkv_bias: bool = False, dtype=PARAM_DTYPE):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * d_head, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * d_head, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * d_head, dtype),
+        "wo": dense_init(ks[3], n_heads * d_head, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * d_head,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * d_head,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * d_head,), dtype)
+    return p
+
+
+def _project_qkv(p, x, n_heads, n_kv_heads, d_head, rope_cos=None, rope_sin=None):
+    B, T, _ = x.shape
+    q = jnp.dot(x, p["wq"])
+    k = jnp.dot(x, p["wk"])
+    v = jnp.dot(x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    from ..sharding import shard_heads  # no-op without a mesh ctx
+    q = shard_heads(q.reshape(B, T, n_heads, d_head))
+    k = shard_heads(k.reshape(B, T, n_kv_heads, d_head))
+    v = shard_heads(v.reshape(B, T, n_kv_heads, d_head))
+    if rope_cos is not None:
+        q = apply_rope(q, rope_cos, rope_sin)
+        k = apply_rope(k, rope_cos, rope_sin)
+    return q, k, v
+
+
+def _mask(qpos, kpos, causal: bool, window: Optional[int]):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                      q_chunk=512, kv_chunk=512, scale=None):
+    """Online-softmax attention. q: [B,Tq,H,D], k/v: [B,Tk,KH,D] -> [B,Tq,H,D]."""
+    B, Tq, H, D = q.shape
+    Tk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else D ** -0.5
+    qc = min(q_chunk, Tq)
+    kc = min(kv_chunk, Tk)
+    assert Tq % qc == 0 and Tk % kc == 0, (Tq, qc, Tk, kc)
+    nq, nk = Tq // qc, Tk // kc
+
+    cdt = jnp.bfloat16 if BF16_EINSUMS else jnp.float32
+    qr = (q.astype(jnp.float32) * scale).astype(cdt).reshape(B, nq, qc, KH, G, D)
+    kr = k.astype(cdt).reshape(B, nk, kc, KH, D)
+    vr = v.astype(cdt).reshape(B, nk, kc, KH, D)
+
+    def q_step(_, qi_and_chunk):
+        qi, qch = qi_and_chunk  # qch: [B, qc, KH, G, D]
+        qpos = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki_and_kv):
+            m_run, l_run, acc = carry
+            ki, kch, vch = ki_and_kv
+            kpos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qch, kch,
+                           preferred_element_type=jnp.float32)
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            msk = _mask(qpos, kpos, causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(cdt), vch,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KH, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, qc, D), jnp.float32)
+        (m, l, acc), _ = _scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out  # [B, KH, G, qc, D]
+
+    _, outs = _scan(q_step, None, (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    # outs: [nq, B, KH, G, qc, D] -> [B, Tq, H, D]
+    out = jnp.transpose(outs, (1, 0, 4, 2, 3, 5)).reshape(B, Tq, H, D)
+    return out.astype(q.dtype)
+
+
+def banded_attention(q, k, v, *, window: int, softcap=None, q_chunk=512, scale=None):
+    """Sliding-window causal attention with true sub-quadratic compute.
+
+    Per query chunk of qc tokens, only the [window + qc]-wide KV band is
+    gathered (static shape), so FLOPs are O(T * (window + qc)) not O(T^2).
+    """
+    B, T, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else D ** -0.5
+    qc = min(q_chunk, T)
+    assert T % qc == 0
+    nq = T // qc
+    W = window
+    cdt = jnp.bfloat16 if BF16_EINSUMS else jnp.float32
+    # left-pad KV by W so every band slice starts at qi*qc
+    kp = jnp.pad(k.astype(cdt), ((0, 0), (W, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v.astype(cdt), ((0, 0), (W, 0), (0, 0), (0, 0)))
+    qr = (q.astype(jnp.float32) * scale).astype(cdt).reshape(B, nq, qc, KH, G, D)
+
+    def q_step(_, args):
+        qi, qch = args
+        start = qi * qc
+        kband = jax.lax.dynamic_slice_in_dim(kp, start, W + qc, axis=1)
+        vband = jax.lax.dynamic_slice_in_dim(vp, start, W + qc, axis=1)
+        qpos = start + jnp.arange(qc)
+        kpos = start - W + jnp.arange(W + qc)  # true positions (<0 = pad)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qch, kband,
+                       preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        msk = (qpos[:, None] >= kpos[None, :]) & (qpos[:, None] - kpos[None, :] < W) \
+            & (kpos[None, :] >= 0)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(cdt), vband,
+                         preferred_element_type=jnp.float32)
+        return None, out
+
+    _, outs = _scan(q_step, None, (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    out = jnp.transpose(outs, (1, 0, 4, 2, 3, 5)).reshape(B, T, H, D)
+    return out.astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # [B, S, KH, D]
+    v: jax.Array      # [B, S, KH, D]
+
+    @staticmethod
+    def create(batch, max_seq, n_kv_heads, d_head, dtype=PARAM_DTYPE):
+        shape = (batch, max_seq, n_kv_heads, d_head)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention_decode(p, x, cache: KVCache, pos: jax.Array, *, n_heads, n_kv_heads,
+                     d_head, rope_theta=None, softcap=None, window=None, scale=None):
+    """One-token decode. x: [B, 1, D_model]; pos: scalar current length.
+
+    Returns (out [B,1,D_model], new_cache).
+    """
+    B = x.shape[0]
+    S = cache.k.shape[1]
+    if rope_theta is not None:
+        cos, sin = rope_table(jnp.full((1,), pos), d_head, rope_theta)
+    else:
+        cos = sin = None
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, d_head, cos, sin)
+    newk = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), pos, axis=1)
+    newv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), pos, axis=1)
+    G = n_heads // n_kv_heads
+    scale = scale if scale is not None else d_head ** -0.5
+    cdt = jnp.bfloat16 if BF16_EINSUMS else jnp.float32
+    # BF16_EINSUMS reads the cache in its storage dtype with fp32 accumulation
+    # (no fp32 copy of the whole cache — the §Perf decode-memory fix).
+    kc_ = newk if BF16_EINSUMS else newk.astype(jnp.float32)
+    vc_ = newv if BF16_EINSUMS else newv.astype(jnp.float32)
+    qh = (q.astype(jnp.float32) * scale).astype(kc_.dtype).reshape(
+        B, n_kv_heads, G, d_head)
+    s = jnp.einsum("bhgd,bshd->bhgs", qh, kc_,
+                   preferred_element_type=jnp.float32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(S)
+    valid = kpos <= pos
+    if window is not None:
+        valid &= kpos > pos - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", pattn.astype(vc_.dtype), vc_,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, n_heads * d_head).astype(x.dtype)
+    return jnp.dot(out, p["wo"]), KVCache(newk, newv)
+
+
+def attention_forward(p, x, *, n_heads, n_kv_heads, d_head, causal=True,
+                      rope_theta: Optional[float] = 10_000.0, window=None,
+                      softcap=None, q_chunk=512, kv_chunk=512, scale=None,
+                      use_banded=False, return_kv=False):
+    """Full-sequence attention (training / prefill). x: [B, T, D_model]."""
+    B, T, _ = x.shape
+    if rope_theta is not None:
+        cos, sin = rope_table(jnp.arange(T), d_head, rope_theta)
+    else:
+        cos = sin = None
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, d_head, cos, sin)
+    if use_banded and window is not None and T > window:
+        out = banded_attention(q, k, v, window=window, softcap=softcap,
+                               q_chunk=q_chunk, scale=scale)
+    else:
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                softcap=softcap, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk, scale=scale)
+    out = jnp.dot(out.reshape(B, T, n_heads * d_head), p["wo"])
+    if return_kv:
+        # cache dtype follows the activation dtype (bf16 in production)
+        return out, KVCache(k.astype(x.dtype), v.astype(x.dtype))
+    return out

@@ -1,0 +1,108 @@
+"""Shared building blocks: norms, rotary embeddings, linear/embedding params.
+
+Parameters are plain pytrees (dicts of jnp arrays); every layer is a pair of
+``init_*`` / ``apply`` functions. Weight dtype defaults to bf16 with fp32
+math where it matters (norms, softmax, rotary).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Dtype = jnp.dtype
+PARAM_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype=PARAM_DTYPE, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=PARAM_DTYPE):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms (fp32 math, cast back)
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def soft_cap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_table(positions: jax.Array, d_head: int, theta: float = 10_000.0
+               ) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables: positions [*(T)] -> ([*T, d_head/2], [*T, d_head/2])."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., T, H, D]; cos/sin: [T, D/2] (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True, act: str = "silu",
+             dtype=PARAM_DTYPE):
+    ks = jax.random.split(key, 3)
+    p = {"wo": dense_init(ks[2], d_ff, d_model, dtype)}
+    if gated:
+        p["wi"] = dense_init(ks[0], d_model, d_ff, dtype)
+        p["wg"] = dense_init(ks[1], d_model, d_ff, dtype)
+    else:
+        p["wi"] = dense_init(ks[0], d_model, d_ff, dtype)
+    p["_act"] = act  # static string survives as aux in our param trees? no — keep out
+    del p["_act"]
+    return p
+
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+         "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}
+
+
+def apply_mlp(p, x: jax.Array, act: str = "silu", gated: bool = True) -> jax.Array:
+    from ..sharding import shard  # late import; no-op without a mesh ctx
+    a = _ACTS[act]
+    h = jnp.dot(x, p["wi"])
+    if gated:
+        h = a(jnp.dot(x, p["wg"]).astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = a(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, *(["batch"] + [None] * (h.ndim - 2) + ["model"]))
+    return jnp.dot(h, p["wo"])

@@ -1,0 +1,671 @@
+"""LM assembly for all assigned architectures.
+
+One ``init_lm`` / ``forward_trunk`` / ``lm_loss`` / ``decode_step`` API covers
+five families (dense, moe, ssm, hybrid, encoder). Layers are stacked and
+iterated with ``lax.scan`` (compile time O(1) in depth); gemma-2's
+local/global alternation scans *pairs*, zamba-2 scans (mamba x g + shared
+attn + LoRA) groups. Training wraps scan bodies in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding import shard
+from . import attention as A
+from . import moe as M
+from . import ssm as S
+from .layers import (PARAM_DTYPE, dense_init, embed_init, init_mlp, apply_mlp,
+                     layer_norm, rms_norm, soft_cap)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def _init_norm(cfg: ArchConfig, dtype=PARAM_DTYPE):
+    if cfg.norm == "layer":
+        return {"w": jnp.ones((cfg.d_model,), dtype), "b": jnp.zeros((cfg.d_model,), dtype)}
+    return {"w": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def _norm(cfg: ArchConfig, p, x):
+    if cfg.norm == "layer":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+def _init_attn_layer(cfg: ArchConfig, key):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": _init_norm(cfg),
+        "attn": A.init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.d_head, qkv_bias=cfg.qkv_bias),
+        "ln2": _init_norm(cfg),
+    }
+    if cfg.post_block_norm:
+        p["ln1_post"] = _init_norm(cfg)
+        p["ln2_post"] = _init_norm(cfg)
+    return p, ks[3]
+
+
+def _init_dense_layer(cfg: ArchConfig, key, d_ff=None):
+    p, k = _init_attn_layer(cfg, key)
+    p["mlp"] = init_mlp(k, cfg.d_model, d_ff or cfg.d_ff, gated=cfg.mlp_gated)
+    return p
+
+
+def _init_moe_layer(cfg: ArchConfig, key):
+    p, k = _init_attn_layer(cfg, key)
+    p["moe"] = M.init_moe(k, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                          n_shared=cfg.n_shared_experts)
+    return p
+
+
+def _init_mamba_layer(cfg: ArchConfig, key):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return {
+        "ln1": _init_norm(cfg),
+        "mamba": S.init_mamba2(key, cfg.d_model, d_inner, cfg.ssm_head_dim,
+                               cfg.ssm_state, cfg.ssm_conv_k),
+    }
+
+
+def _stack(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _hybrid_counts(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(n_groups, mamba_per_group, tail) with n_layers mamba layers total."""
+    g = cfg.hybrid_group
+    n_groups = cfg.n_layers // g
+    tail = cfg.n_layers - n_groups * g
+    return n_groups, g, tail
+
+
+# Layer-scan indirection: the roofline probes (launch/dryrun.py) set
+# ``SCAN_UNROLL=True`` so XLA's cost analysis (which counts while-loop bodies
+# once) sees every layer's FLOPs/bytes/collectives. Production keeps rolled
+# scans for O(1)-in-depth compile times.
+SCAN_UNROLL = False
+
+
+def _scan(f, init, xs):
+    if SCAN_UNROLL:
+        n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        return jax.lax.scan(f, init, xs, unroll=max(int(n), 1))
+    return jax.lax.scan(f, init, xs)
+
+
+def init_lm(cfg: ArchConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {"final_norm": _init_norm(cfg)}
+
+    if cfg.frontend == "token":
+        params["embed"] = embed_init(ks[0], cfg.vocab, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[1], cfg.d_model, cfg.vocab)
+
+    fam = cfg.family
+    if fam in ("dense", "encoder"):
+        if cfg.local_global_period == 2:
+            assert cfg.n_layers % 2 == 0
+            params["layers"] = _stack(
+                lambda k: _stack(lambda k2: _init_dense_layer(cfg, k2), k, 2),
+                ks[2], cfg.n_layers // 2)
+        else:
+            params["layers"] = _stack(lambda k: _init_dense_layer(cfg, k),
+                                      ks[2], cfg.n_layers)
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            params["dense_layers"] = _stack(
+                lambda k: _init_dense_layer(cfg, k, d_ff=cfg.first_dense_ff), ks[3], nd)
+        params["layers"] = _stack(lambda k: _init_moe_layer(cfg, k),
+                                  ks[2], cfg.n_layers - nd)
+    elif fam == "ssm":
+        params["layers"] = _stack(lambda k: _init_mamba_layer(cfg, k),
+                                  ks[2], cfg.n_layers)
+    elif fam == "hybrid":
+        n_groups, g, tail = _hybrid_counts(cfg)
+        params["layers"] = _stack(
+            lambda k: _stack(lambda k2: _init_mamba_layer(cfg, k2), k, g),
+            ks[2], n_groups)
+        if tail:
+            params["tail"] = _stack(lambda k: _init_mamba_layer(cfg, k), ks[4], tail)
+        params["shared"] = _init_dense_layer(cfg, ks[5])
+        r = cfg.lora_rank
+
+        def lora_init(k):
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            return {
+                "a_q": dense_init(k1, cfg.d_model, r),
+                "b_q": (jnp.zeros((r, cfg.attn_dim), PARAM_DTYPE)),
+                "a_i": dense_init(k3, cfg.d_model, r),
+                "b_i": (jnp.zeros((r, cfg.d_ff), PARAM_DTYPE)),
+            }
+
+        params["lora"] = _stack(lora_init, ks[6], n_groups)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# blocks (forward)
+# ---------------------------------------------------------------------------
+def _attn_kwargs(cfg: ArchConfig, local: bool):
+    return dict(
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+        causal=cfg.causal, rope_theta=cfg.rope_theta,
+        window=cfg.sliding_window if local else None,
+        softcap=cfg.attn_softcap, scale=cfg.attn_scale,
+        use_banded=local,
+    )
+
+
+def _dense_block(cfg: ArchConfig, p, h, *, local=False, q_chunk=512, kv_chunk=512,
+                 moe=False, dense_mlp_key="mlp"):
+    a_in = _norm(cfg, p["ln1"], h)
+    attn_out = A.attention_forward(p["attn"], a_in, q_chunk=q_chunk,
+                                   kv_chunk=kv_chunk, **_attn_kwargs(cfg, local))
+    if cfg.post_block_norm:
+        attn_out = _norm(cfg, p["ln1_post"], attn_out)
+    h = h + attn_out
+    m_in = _norm(cfg, p["ln2"], h)
+    aux = jnp.zeros((), jnp.float32)
+    if moe:
+        mlp_out, aux = M.moe_capacity(p["moe"], m_in, top_k=cfg.top_k,
+                                      n_experts=cfg.n_experts,
+                                      capacity_factor=cfg.moe_capacity_factor,
+                                      act=cfg.act)
+    else:
+        mlp_out = apply_mlp(p[dense_mlp_key], m_in, act=cfg.act, gated=cfg.mlp_gated)
+    if cfg.post_block_norm:
+        mlp_out = _norm(cfg, p["ln2_post"], mlp_out)
+    return h + mlp_out, aux
+
+
+def _mamba_block(cfg: ArchConfig, p, h, chunk=128):
+    m_in = _norm(cfg, p["ln1"], h)
+    out = S.mamba2_forward(p["mamba"], m_in, head_dim=cfg.ssm_head_dim,
+                           state=cfg.ssm_state, chunk=chunk)
+    return h + out
+
+
+def _shared_block(cfg: ArchConfig, shared, lora, h, q_chunk=512, kv_chunk=512):
+    """zamba2 shared attn+mlp block with per-site LoRA on wq / wi."""
+    p = dict(shared)
+    attn = dict(p["attn"])
+    attn["wq"] = attn["wq"] + (lora["a_q"].astype(jnp.float32)
+                               @ lora["b_q"].astype(jnp.float32)).astype(attn["wq"].dtype)
+    mlp = dict(p["mlp"])
+    mlp["wi"] = mlp["wi"] + (lora["a_i"].astype(jnp.float32)
+                             @ lora["b_i"].astype(jnp.float32)).astype(mlp["wi"].dtype)
+    p2 = {**p, "attn": attn, "mlp": mlp}
+    h, _ = _dense_block(cfg, p2, h, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# trunk
+# ---------------------------------------------------------------------------
+def _sinusoid(T: int, D: int) -> jax.Array:
+    pos = jnp.arange(T, dtype=jnp.float32)[:, None]
+    i = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * i / D)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def embed_inputs(cfg: ArchConfig, params, inputs) -> jax.Array:
+    """tokens [B,T] int32 (token frontend) or embeddings [B,T,D] (stub)."""
+    if cfg.frontend == "token":
+        h = params["embed"][inputs]
+        if cfg.name.startswith("gemma"):
+            h = (h.astype(jnp.float32) * (cfg.d_model ** 0.5)).astype(h.dtype)
+    else:
+        h = inputs
+        if cfg.family == "encoder":  # stub frontend: add sinusoidal positions
+            h = h + _sinusoid(h.shape[1], cfg.d_model).astype(h.dtype)[None]
+    return shard(h, "batch", None, None)
+
+
+def forward_trunk(cfg: ArchConfig, params, h, *, remat=True, q_chunk=512,
+                  kv_chunk=512, ssd_chunk=128):
+    """[B, T, D] -> ([B, T, D], aux_loss)."""
+    aux0 = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    def maybe_ckpt(f):
+        return jax.checkpoint(f) if remat else f
+
+    if fam in ("dense", "encoder"):
+        if cfg.local_global_period == 2:
+            def body(carry, lp):
+                hh, aux = carry
+                hh, _ = _dense_block(cfg, jax.tree.map(lambda x: x[0], lp), hh,
+                                     local=True, q_chunk=q_chunk, kv_chunk=kv_chunk)
+                hh, _ = _dense_block(cfg, jax.tree.map(lambda x: x[1], lp), hh,
+                                     local=False, q_chunk=q_chunk, kv_chunk=kv_chunk)
+                return (hh, aux), None
+        else:
+            def body(carry, lp):
+                hh, aux = carry
+                hh, _ = _dense_block(cfg, lp, hh, q_chunk=q_chunk, kv_chunk=kv_chunk)
+                return (hh, aux), None
+        (h, aux0), _ = _scan(maybe_ckpt(body), (h, aux0), params["layers"])
+
+    elif fam == "moe":
+        if "dense_layers" in params:
+            def dbody(carry, lp):
+                hh, aux = carry
+                hh, _ = _dense_block(cfg, lp, hh, q_chunk=q_chunk, kv_chunk=kv_chunk)
+                return (hh, aux), None
+            (h, aux0), _ = _scan(maybe_ckpt(dbody), (h, aux0),
+                                        params["dense_layers"])
+
+        def body(carry, lp):
+            hh, aux = carry
+            hh, a = _dense_block(cfg, lp, hh, moe=True, q_chunk=q_chunk,
+                                 kv_chunk=kv_chunk)
+            return (hh, aux + a), None
+        (h, aux0), _ = _scan(maybe_ckpt(body), (h, aux0), params["layers"])
+
+    elif fam == "ssm":
+        def body(carry, lp):
+            hh, aux = carry
+            return (_mamba_block(cfg, lp, hh, chunk=ssd_chunk), aux), None
+        (h, aux0), _ = _scan(maybe_ckpt(body), (h, aux0), params["layers"])
+
+    elif fam == "hybrid":
+        shared, loras = params["shared"], params["lora"]
+
+        def gbody(carry, args):
+            hh, aux = carry
+            group_p, lora = args
+
+            def mbody(c, lp):
+                return _mamba_block(cfg, lp, c, chunk=ssd_chunk), None
+            hh, _ = _scan(mbody, hh, group_p)
+            hh = _shared_block(cfg, shared, lora, hh, q_chunk, kv_chunk)
+            return (hh, aux), None
+
+        (h, aux0), _ = _scan(maybe_ckpt(gbody), (h, aux0),
+                                    (params["layers"], loras))
+        if "tail" in params:
+            def tbody(carry, lp):
+                hh, aux = carry
+                return (_mamba_block(cfg, lp, hh, chunk=ssd_chunk), aux), None
+            (h, aux0), _ = _scan(maybe_ckpt(tbody), (h, aux0), params["tail"])
+    else:
+        raise ValueError(fam)
+
+    return _norm(cfg, params["final_norm"], h), aux0
+
+
+def _head_weights(cfg: ArchConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def lm_logits(cfg: ArchConfig, params, h) -> jax.Array:
+    logits = jnp.dot(h, _head_weights(cfg, params)).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return shard(logits, *(["batch"] + [None] * (logits.ndim - 2) + ["model"]))
+
+
+def lm_forward(cfg: ArchConfig, params, inputs, *, remat=False, **kw) -> jax.Array:
+    """Full logits [B, T, V] — tests / small models only."""
+    h = embed_inputs(cfg, params, inputs)
+    h, _ = forward_trunk(cfg, params, h, remat=remat, **kw)
+    return lm_logits(cfg, params, h)
+
+
+def lm_loss(cfg: ArchConfig, params, inputs, labels, *, remat=True,
+            loss_chunk=512, aux_weight=0.01, **kw):
+    """Next-token CE, seq-chunked so [B, Tc, V] logits never exceed a chunk.
+
+    labels: int32 [B, T], -1 = masked.
+    """
+    h = embed_inputs(cfg, params, inputs)
+    h, aux = forward_trunk(cfg, params, h, remat=remat, **kw)
+    B, T, D = h.shape
+    W = _head_weights(cfg, params)
+    c = min(loss_chunk, T)
+    assert T % c == 0
+    nc = T // c
+
+    def chunk_body(carry, args):
+        tot, cnt = carry
+        hc, yc = args  # [B, c, D], [B, c]
+        logits = jnp.dot(hc, W).astype(jnp.float32)
+        if cfg.final_softcap:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        logits = shard(logits, "batch", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(yc, 0)[..., None], axis=-1)[..., 0]
+        valid = (yc >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - gold) * valid)
+        cnt = cnt + jnp.sum(valid)
+        return (tot, cnt), None
+
+    hc = jnp.moveaxis(h.reshape(B, nc, c, D), 1, 0)
+    yc = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+    (tot, cnt), _ = _scan(chunk_body, (jnp.zeros(()), jnp.zeros(())), (hc, yc))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# prefill (serving): trunk + cache collection + last-token logits
+# ---------------------------------------------------------------------------
+def _dense_block_kv(cfg, p, h, *, local=False, q_chunk=512, kv_chunk=512, moe=False):
+    a_in = _norm(cfg, p["ln1"], h)
+    attn_out, kv = A.attention_forward(
+        p["attn"], a_in, q_chunk=q_chunk, kv_chunk=kv_chunk, return_kv=True,
+        **_attn_kwargs(cfg, local))
+    if cfg.post_block_norm:
+        attn_out = _norm(cfg, p["ln1_post"], attn_out)
+    h = h + attn_out
+    m_in = _norm(cfg, p["ln2"], h)
+    if moe:
+        mlp_out, _ = M.moe_capacity(p["moe"], m_in, top_k=cfg.top_k,
+                                    n_experts=cfg.n_experts,
+                                    capacity_factor=cfg.moe_capacity_factor, act=cfg.act)
+    else:
+        mlp_out = apply_mlp(p["mlp"], m_in, act=cfg.act, gated=cfg.mlp_gated)
+    if cfg.post_block_norm:
+        mlp_out = _norm(cfg, p["ln2_post"], mlp_out)
+    return h + mlp_out, kv
+
+
+def prefill_forward(cfg: ArchConfig, params, inputs, *, q_chunk=512,
+                    kv_chunk=512, ssd_chunk=128):
+    """Serving prefill: returns (last-token logits [B, V], DecodeState).
+
+    Encoder family returns (frame logits [B, T, V], None).
+    """
+    h = embed_inputs(cfg, params, inputs)
+    B, T = h.shape[0], h.shape[1]
+    fam = cfg.family
+
+    if fam == "encoder":
+        hh, _ = forward_trunk(cfg, params, h, remat=False, q_chunk=q_chunk,
+                              kv_chunk=kv_chunk)
+        return lm_logits(cfg, params, hh), None
+
+    caches: Dict[str, Any] = {}
+    if fam in ("dense", "moe"):
+        if fam == "moe" and "dense_layers" in params:
+            def dbody(hh, lp):
+                hh, kv = _dense_block_kv(cfg, lp, hh, q_chunk=q_chunk,
+                                         kv_chunk=kv_chunk)
+                return hh, kv
+            h, kvd = _scan(dbody, h, params["dense_layers"])
+            caches["kv_dense"] = kvd
+        if cfg.local_global_period == 2:
+            def body(hh, lp):
+                hh, kv0 = _dense_block_kv(cfg, jax.tree.map(lambda x: x[0], lp), hh,
+                                          local=True, q_chunk=q_chunk, kv_chunk=kv_chunk)
+                hh, kv1 = _dense_block_kv(cfg, jax.tree.map(lambda x: x[1], lp), hh,
+                                          local=False, q_chunk=q_chunk, kv_chunk=kv_chunk)
+                return hh, jax.tree.map(lambda a, b: jnp.stack([a, b]), kv0, kv1)
+        else:
+            def body(hh, lp):
+                return _dense_block_kv(cfg, lp, hh, moe=(fam == "moe"),
+                                       q_chunk=q_chunk, kv_chunk=kv_chunk)
+        h, kvs = _scan(body, h, params["layers"])
+        caches["kv"] = kvs
+    elif fam == "ssm":
+        def body(hh, lp):
+            m_in = _norm(cfg, lp["ln1"], hh)
+            out, mc = S.mamba2_forward(lp["mamba"], m_in, head_dim=cfg.ssm_head_dim,
+                                       state=cfg.ssm_state, chunk=ssd_chunk,
+                                       return_state=True)
+            return hh + out, mc
+        h, mcs = _scan(body, h, params["layers"])
+        caches["mamba"] = mcs
+    elif fam == "hybrid":
+        shared, loras = params["shared"], params["lora"]
+
+        def gbody(hh, args):
+            gp, lora = args
+
+            def mbody(c, lp):
+                m_in = _norm(cfg, lp["ln1"], c)
+                out, mc = S.mamba2_forward(lp["mamba"], m_in,
+                                           head_dim=cfg.ssm_head_dim,
+                                           state=cfg.ssm_state, chunk=ssd_chunk,
+                                           return_state=True)
+                return c + out, mc
+            hh, mc = _scan(mbody, hh, gp)
+            p = dict(shared)
+            attn = dict(p["attn"])
+            attn["wq"] = attn["wq"] + (lora["a_q"].astype(jnp.float32)
+                                       @ lora["b_q"].astype(jnp.float32)
+                                       ).astype(attn["wq"].dtype)
+            mlp = dict(p["mlp"])
+            mlp["wi"] = mlp["wi"] + (lora["a_i"].astype(jnp.float32)
+                                     @ lora["b_i"].astype(jnp.float32)
+                                     ).astype(mlp["wi"].dtype)
+            p2 = {**p, "attn": attn, "mlp": mlp}
+            hh, kv = _dense_block_kv(cfg, p2, hh, q_chunk=q_chunk, kv_chunk=kv_chunk)
+            return hh, (mc, kv)
+
+        h, (mcs, kvs) = _scan(gbody, h, (params["layers"], loras))
+        caches["mamba"], caches["kv"] = mcs, kvs
+        if "tail" in params:
+            def tbody(hh, lp):
+                m_in = _norm(cfg, lp["ln1"], hh)
+                out, mc = S.mamba2_forward(lp["mamba"], m_in,
+                                           head_dim=cfg.ssm_head_dim,
+                                           state=cfg.ssm_state, chunk=ssd_chunk,
+                                           return_state=True)
+                return hh + out, mc
+            h, mct = _scan(tbody, h, params["tail"])
+            caches["mamba_tail"] = mct
+    else:
+        raise ValueError(fam)
+
+    h_last = _norm(cfg, params["final_norm"], h[:, -1:, :])
+    logits = lm_logits(cfg, params, h_last)[:, 0]
+    return logits, DecodeState(caches, jnp.asarray(T, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+class DecodeState(NamedTuple):
+    caches: Any        # family-specific pytree, layer-stacked
+    pos: jax.Array     # scalar int32: tokens already in cache
+
+
+def pad_prefill_caches(cfg: ArchConfig, state: "DecodeState", max_seq: int
+                       ) -> "DecodeState":
+    """Grow prefill KV caches (length T) to the decode budget ``max_seq``."""
+    caches = dict(state.caches)
+    for key in ("kv", "kv_dense"):
+        if key in caches:
+            kv = caches[key]
+            seq_axis = kv.k.ndim - 3  # [..., S, KH, Dh]
+            pad = max_seq - kv.k.shape[seq_axis]
+            cfgpad = [(0, 0)] * kv.k.ndim
+            cfgpad[seq_axis] = (0, pad)
+            caches[key] = A.KVCache(jnp.pad(kv.k, cfgpad), jnp.pad(kv.v, cfgpad))
+    return DecodeState(caches, state.pos)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int) -> DecodeState:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        nd = cfg.first_dense_layers if fam == "moe" else 0
+        L = cfg.n_layers - nd if cfg.local_global_period != 2 else cfg.n_layers // 2
+        inner = 2 if cfg.local_global_period == 2 else 1
+        shape = (L,) + ((inner,) if inner == 2 else ()) + \
+                (batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+        kv = A.KVCache(jnp.zeros(shape, PARAM_DTYPE), jnp.zeros(shape, PARAM_DTYPE))
+        nd = cfg.first_dense_layers
+        caches: Any = {"kv": kv}
+        if fam == "moe" and nd:
+            dshape = (nd, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+            caches["kv_dense"] = A.KVCache(jnp.zeros(dshape, PARAM_DTYPE),
+                                           jnp.zeros(dshape, PARAM_DTYPE))
+        return DecodeState(caches, jnp.zeros((), jnp.int32))
+    if fam == "ssm":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        conv_dim = d_inner + 2 * cfg.ssm_state
+        caches = {"mamba": S.MambaCache(
+            jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv_k - 1, conv_dim), PARAM_DTYPE),
+            jnp.zeros((cfg.n_layers, batch, H, cfg.ssm_state, cfg.ssm_head_dim),
+                      jnp.float32))}
+        return DecodeState(caches, jnp.zeros((), jnp.int32))
+    if fam == "hybrid":
+        n_groups, g, tail = _hybrid_counts(cfg)
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        conv_dim = d_inner + 2 * cfg.ssm_state
+
+        def mcache(n):
+            return S.MambaCache(
+                jnp.zeros((n, batch, cfg.ssm_conv_k - 1, conv_dim), PARAM_DTYPE),
+                jnp.zeros((n, batch, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32))
+        kvshape = (n_groups, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+        caches = {
+            "mamba": jax.tree.map(lambda x: x.reshape((n_groups, g) + x.shape[1:]),
+                                  mcache(n_groups * g)),
+            "kv": A.KVCache(jnp.zeros(kvshape, PARAM_DTYPE),
+                            jnp.zeros(kvshape, PARAM_DTYPE)),
+        }
+        if tail:
+            caches["mamba_tail"] = mcache(tail)
+        return DecodeState(caches, jnp.zeros((), jnp.int32))
+    raise ValueError(f"{cfg.family} has no decode step")
+
+
+def _attn_decode_block(cfg, p, h, kv, pos, *, local=False):
+    a_in = _norm(cfg, p["ln1"], h)
+    attn_out, kv = A.attention_decode(
+        p["attn"], a_in, kv, pos, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.d_head, rope_theta=cfg.rope_theta, softcap=cfg.attn_softcap,
+        window=cfg.sliding_window if local else None, scale=cfg.attn_scale)
+    if cfg.post_block_norm:
+        attn_out = _norm(cfg, p["ln1_post"], attn_out)
+    h = h + attn_out
+    m_in = _norm(cfg, p["ln2"], h)
+    if "moe" in p:
+        mlp_out, _ = M.moe_capacity(p["moe"], m_in, top_k=cfg.top_k,
+                                    n_experts=cfg.n_experts,
+                                    capacity_factor=cfg.moe_capacity_factor, act=cfg.act)
+    else:
+        mlp_out = apply_mlp(p["mlp"], m_in, act=cfg.act, gated=cfg.mlp_gated)
+    if cfg.post_block_norm:
+        mlp_out = _norm(cfg, p["ln2_post"], mlp_out)
+    return h + mlp_out, kv
+
+
+def decode_step(cfg: ArchConfig, params, tokens: jax.Array, state: DecodeState
+                ) -> Tuple[jax.Array, DecodeState]:
+    """One-token step for the whole batch. tokens: [B, 1] -> logits [B, V]."""
+    h = embed_inputs(cfg, params, tokens)
+    pos = state.pos
+    caches = dict(state.caches)
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        if fam == "moe" and "kv_dense" in caches:
+            def dbody(hh, args):
+                lp, kv = args
+                hh, kv = _attn_decode_block(cfg, lp, hh, kv, pos)
+                return hh, kv
+            h, kvd = _scan(dbody, h, (params["dense_layers"], caches["kv_dense"]))
+            caches["kv_dense"] = kvd
+
+        if cfg.local_global_period == 2:
+            def body(hh, args):
+                lp, kv = args
+                hh, kv0 = _attn_decode_block(cfg, jax.tree.map(lambda x: x[0], lp), hh,
+                                             jax.tree.map(lambda x: x[0], kv), pos,
+                                             local=True)
+                hh, kv1 = _attn_decode_block(cfg, jax.tree.map(lambda x: x[1], lp), hh,
+                                             jax.tree.map(lambda x: x[1], kv), pos)
+                kv = jax.tree.map(lambda a, b: jnp.stack([a, b]), kv0, kv1)
+                return hh, kv
+        else:
+            def body(hh, args):
+                lp, kv = args
+                return _attn_decode_block(cfg, lp, hh, kv, pos)
+        h, kvs = _scan(body, h, (params["layers"], caches["kv"]))
+        caches["kv"] = kvs
+
+    elif fam == "ssm":
+        def body(hh, args):
+            lp, mc = args
+            m_in = _norm(cfg, lp["ln1"], hh)
+            out, mc = S.mamba2_decode(lp["mamba"], m_in, mc,
+                                      head_dim=cfg.ssm_head_dim, state=cfg.ssm_state)
+            return hh + out, mc
+        h, mcs = _scan(body, h, (params["layers"], caches["mamba"]))
+        caches["mamba"] = mcs
+
+    elif fam == "hybrid":
+        shared, loras = params["shared"], params["lora"]
+
+        def gbody(hh, args):
+            gp, lora, mc, kv = args
+
+            def mbody(c, a):
+                lp, mcl = a
+                m_in = _norm(cfg, lp["ln1"], c)
+                out, mcl = S.mamba2_decode(lp["mamba"], m_in, mcl,
+                                           head_dim=cfg.ssm_head_dim,
+                                           state=cfg.ssm_state)
+                return c + out, mcl
+            hh, mc = _scan(mbody, hh, (gp, mc))
+            # shared attn block with LoRA (decode)
+            p = dict(shared)
+            attn = dict(p["attn"])
+            attn["wq"] = attn["wq"] + (lora["a_q"].astype(jnp.float32)
+                                       @ lora["b_q"].astype(jnp.float32)
+                                       ).astype(attn["wq"].dtype)
+            mlp = dict(p["mlp"])
+            mlp["wi"] = mlp["wi"] + (lora["a_i"].astype(jnp.float32)
+                                     @ lora["b_i"].astype(jnp.float32)
+                                     ).astype(mlp["wi"].dtype)
+            p2 = {**p, "attn": attn, "mlp": mlp}
+            hh, kv = _attn_decode_block(cfg, p2, hh, kv, pos)
+            return hh, (mc, kv)
+
+        h, (mcs, kvs) = _scan(
+            gbody, h, (params["layers"], loras, caches["mamba"], caches["kv"]))
+        caches["mamba"], caches["kv"] = mcs, kvs
+        if "mamba_tail" in caches:
+            def tbody(hh, args):
+                lp, mc = args
+                m_in = _norm(cfg, lp["ln1"], hh)
+                out, mc = S.mamba2_decode(lp["mamba"], m_in, mc,
+                                          head_dim=cfg.ssm_head_dim,
+                                          state=cfg.ssm_state)
+                return hh + out, mc
+            h, mct = _scan(tbody, h, (params["tail"], caches["mamba_tail"]))
+            caches["mamba_tail"] = mct
+    else:
+        raise ValueError(fam)
+
+    h = _norm(cfg, params["final_norm"], h)
+    logits = lm_logits(cfg, params, h)[:, 0]
+    return logits, DecodeState(caches, pos + 1)

@@ -1,0 +1,171 @@
+"""Mamba-2 (SSD — state-space duality) blocks: chunked scan + decode step.
+
+Implements the SSD chunked algorithm from arXiv:2405.21060: within-chunk
+quadratic (attention-like) term + cross-chunk state recurrence, giving
+O(T * chunk) work and scan-friendly lowering. A naive recurrent oracle lives
+in the tests.
+
+Recurrence convention: h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t (x) x_t,
+y_t = C_t . h_t + D * x_t, with A negative (A = -exp(A_log)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import PARAM_DTYPE, dense_init, rms_norm
+
+
+def init_mamba2(key, d_model: int, d_inner: int, head_dim: int, state: int,
+                conv_k: int = 4, dtype=PARAM_DTYPE):
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * state
+    ks = jax.random.split(key, 5)
+    # dt bias init so softplus(dt_bias) ~ [1e-3, 1e-1] (mamba default)
+    u = jax.random.uniform(ks[3], (n_heads,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "w_in": dense_init(ks[0], d_model, 2 * d_inner + 2 * state + n_heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_k, conv_dim), jnp.float32)
+                   * (conv_k ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_w": jnp.zeros((d_inner,), dtype),
+        "w_out": dense_init(ks[2], d_inner, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B, T, C]; w: [K, C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):  # K is tiny (4); unrolled adds, no conv primitive needed
+        out = out + xp[:, i : i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, B, C, h0=None, chunk: int = 128):
+    """SSD scan. x: [b,T,H,P]; dt: [b,T,H]; A: [H]; B,C: [b,T,N].
+
+    Returns (y [b,T,H,P], h_final [b,H,P,N]).
+    """
+    b, T, H, P = x.shape
+    N = B.shape[-1]
+    L = min(chunk, T)
+    assert T % L == 0, (T, L)
+    nc = T // L
+
+    a = dt.astype(jnp.float32) * A[None, None, :]            # [b,T,H] (<=0)
+    xc = x.astype(jnp.float32).reshape(b, nc, L, H, P)
+    dtc = dt.astype(jnp.float32).reshape(b, nc, L, H)
+    Bc = B.astype(jnp.float32).reshape(b, nc, L, N)
+    Cc = C.astype(jnp.float32).reshape(b, nc, L, N)
+    ac = a.reshape(b, nc, L, H)
+    acs = jnp.cumsum(ac, axis=2)                              # inclusive cumsum
+
+    # ---- intra-chunk (attention-like, lower-triangular decay) -------------
+    # decay[i, j] = exp(acs[i] - acs[j]) for i >= j
+    diff = acs[:, :, :, None, :] - acs[:, :, None, :, :]      # [b,c,i,j,h]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                # [b,c,i,j]
+    scores = cb[..., None] * decay * dtc[:, :, None, :, :]    # [b,c,i,j,h]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc)
+
+    # ---- chunk states ------------------------------------------------------
+    seg_end = acs[:, :, -1:, :]                               # [b,c,1,h]
+    w_state = jnp.exp(seg_end - acs) * dtc                    # [b,c,l,h]
+    S = jnp.einsum("bcln,bclh,bclhp->bchnp", Bc, w_state, xc)  # [b,c,h,n,p]
+    chunk_decay = jnp.exp(seg_end[:, :, 0, :])                # [b,c,h]
+
+    # ---- cross-chunk recurrence -------------------------------------------
+    if h0 is None:
+        h0 = jnp.zeros((b, H, N, P), jnp.float32)
+
+    def step(h, args):
+        dec, s = args                                          # dec: [b,h]; s: [b,h,n,p]
+        h_out = h                                              # state BEFORE this chunk
+        h_new = dec[:, :, None, None] * h + s
+        return h_new, h_out
+
+    h_final, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                      # [b,c,h,n,p]
+
+    # ---- inter-chunk contribution -----------------------------------------
+    in_decay = jnp.exp(acs)                                    # [b,c,l,h]
+    y_inter = jnp.einsum("bcln,bclh,bchnp->bclhp", Cc, in_decay, h_prevs)
+
+    y = (y_intra + y_inter).reshape(b, T, H, P)
+    return y, h_final
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # [B, K-1, conv_dim] last inputs
+    ssm: jax.Array    # [B, H, N, P]
+
+    @staticmethod
+    def create(batch, conv_k, conv_dim, n_heads, state, head_dim, dtype=jnp.float32):
+        return MambaCache(
+            jnp.zeros((batch, conv_k - 1, conv_dim), dtype),
+            jnp.zeros((batch, n_heads, state, head_dim), jnp.float32),
+        )
+
+
+def mamba2_forward(p, x, *, head_dim: int, state: int, chunk: int = 128,
+                   return_state: bool = False):
+    """Full-sequence Mamba2 block. x: [B, T, D] -> [B, T, D]."""
+    Bsz, T, D = x.shape
+    d_inner = p["w_out"].shape[0]
+    H = d_inner // head_dim
+    K = p["conv_w"].shape[0]
+    zxbcdt = jnp.dot(x, p["w_in"])
+    z, xbc_pre, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * state], axis=-1)
+    xbc = _causal_conv(xbc_pre, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xs, Bs, Cs = jnp.split(xbc, [d_inner, d_inner + state], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_fin = ssd_chunked(xs.reshape(Bsz, T, H, head_dim), dtv, A, Bs, Cs, chunk=chunk)
+    y = y + p["D"][None, None, :, None] * xs.reshape(Bsz, T, H, head_dim).astype(jnp.float32)
+    y = y.reshape(Bsz, T, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["norm_w"])
+    out = jnp.dot(y, p["w_out"])
+    if return_state:
+        cache = MambaCache(xbc_pre[:, T - (K - 1):, :], h_fin)
+        return out, cache
+    return out
+
+
+def mamba2_decode(p, x, cache: MambaCache, *, head_dim: int, state: int
+                  ) -> Tuple[jax.Array, MambaCache]:
+    """One-token step. x: [B, 1, D]."""
+    Bsz = x.shape[0]
+    d_inner = p["w_out"].shape[0]
+    H = d_inner // head_dim
+    zxbcdt = jnp.dot(x[:, 0], p["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * state], axis=-1)
+    # conv over (cached K-1 inputs + current)
+    hist = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # [B, K, C]
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = (hist.astype(jnp.float32) * w[None]).sum(1) + p["conv_b"].astype(jnp.float32)
+    xbc_a = jax.nn.silu(conv_out)
+    xs, Bs, Cs = jnp.split(xbc_a, [d_inner, d_inner + state], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # [B,H]
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(Bsz, H, head_dim)
+    dec = jnp.exp(dtv * A[None])                                     # [B,H]
+    h_new = (dec[:, :, None, None] * cache.ssm
+             + jnp.einsum("bn,bh,bhp->bhnp", Bs, dtv, xh))
+    y = jnp.einsum("bn,bhnp->bhp", Cs, h_new) + p["D"][None, :, None] * xh
+    y = y.reshape(Bsz, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["norm_w"])
+    out = jnp.dot(y, p["w_out"])[:, None, :]
+    return out, MambaCache(hist[:, 1:], h_new)

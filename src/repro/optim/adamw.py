@@ -1,0 +1,77 @@
+"""AdamW with fp32 master weights over bf16 params, global-norm clipping,
+cosine LR schedule, and a bf16 gradient-compression hook for the cross-pod
+all-reduce (DESIGN.md §6: distributed-optimization tricks).
+
+State layout (all sharded like the params via `sharding.param_specs`):
+  m, v      fp32 moments
+  master    fp32 master copy (only when params are bf16)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any  # fp32 copy of params (or None-like empty dict)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros), master)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree_util.tree_leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup, warm, cos)
+
+
+def compress_grads(grads):
+    """bf16 gradient compression for the cross-pod reduce: halves the
+    collective payload; moments/updates stay fp32."""
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, max_grad_norm: Optional[float] = 1.0):
+    if max_grad_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.zeros(())
+    step = state.step + 1
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v, grads)
+
+    def upd(master, mm, vv):
+        mh = mm / b1c
+        vh = vv / b2c
+        return master - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * master)
+
+    master = jax.tree.map(upd, state.master, m, v)
+    new_params = jax.tree.map(lambda mst, p: mst.astype(p.dtype), master, params)
+    return new_params, AdamWState(step, m, v, master), {"grad_norm": gnorm}

@@ -1,0 +1,206 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallback.
+
+Scheme (DESIGN.md §6): FSDP + TP hybrid.
+  * column-parallel weights [d_in, d_out]  -> P("data", "model")
+  * row-parallel weights    [d_in, d_out]  -> P("model", "data")
+  * expert weights [E, ...]                -> experts on "model" (EP)
+  * embeddings [V, D]                      -> P("model", "data") (vocab-TP)
+  * activations: batch on ("pod","data"), feature/expert/vocab on "model",
+    attention heads on "model" when divisible, else head_dim, else replicate.
+
+Every axis assignment is validated for divisibility; a non-dividing axis is
+dropped (replication) — e.g. qwen's 40 kv-heads on a 16-way model axis fall
+back to head_dim (128/16) sharding. This is the documented fallback chain
+that makes all 10 archs lower on the same mesh.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: dict = {"mesh": None}
+
+
+def set_mesh_ctx(mesh: Optional[Mesh]) -> None:
+    _CTX["mesh"] = mesh
+
+
+def get_mesh_ctx() -> Optional[Mesh]:
+    return _CTX["mesh"]
+
+
+def clear_mesh_ctx() -> None:
+    _CTX["mesh"] = None
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    return n
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that carry the batch: ("pod","data") when pod exists."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def resolve_spec(shape: Sequence[int], want: Sequence, mesh: Mesh) -> P:
+    """Validate a candidate spec against divisibility; drop failing axes."""
+    out = []
+    for dim, ax in zip(shape, want):
+        if ax is None:
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, ax) == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shard(x: jax.Array, *want) -> jax.Array:
+    """Activation sharding constraint (no-op outside a mesh context).
+
+    ``want`` entries: None | mesh-axis name | tuple of axis names | "batch"
+    (resolves to ("pod","data") / ("data",) depending on the mesh).
+    """
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    resolved = []
+    for ax in want:
+        if ax == "batch":
+            ax = batch_axes(mesh)
+        resolved.append(ax)
+    spec = resolve_spec(x.shape, resolved, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_heads(x: jax.Array, head_axis: int = 2, dim_axis: int = 3) -> jax.Array:
+    """Shard [B, T, H, Dh]: heads on "model" when divisible, else UNCONSTRAINED.
+
+    §Perf finding (EXPERIMENTS.md): the earlier head_dim fallback (shard Dh
+    when H does not divide the model axis) forced XLA into "involuntary full
+    rematerialization" copies around RoPE's half-split — qwen prefill_32k
+    memory term 385 s -> 32 s (12x) once removed. Non-divisible head counts
+    now leave the layout to the partitioner.
+    """
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    msz = _axis_size(mesh, "model")
+    want: list = [batch_axes(mesh)] + [None] * (x.ndim - 1)
+    if x.shape[head_axis] % msz == 0:
+        want[head_axis] = "model"
+    # batch stays constrained in all cases (dropping it regressed decode 3x)
+    spec = resolve_spec(x.shape, want, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+# (regex on the param's key-path leaf(s), spec for the trailing dims).
+# Leading stacked-layer dims are replicated automatically.
+_RULES = [
+    (r"(wq|wk|wv|wi|wg)$", ("data", "model")),
+    (r"wo$", ("model", "data")),
+    (r"w_in$", ("data", "model")),
+    (r"w_out$", ("model", "data")),
+    (r"embed$", ("model", "data")),
+    (r"head$", ("data", "model")),
+    (r"router$", ("data", None)),
+    (r"conv_w$", (None, "model")),
+    (r"(a_q|a_i)$", ("data", None)),      # LoRA A
+    (r"(b_q|b_i)$", (None, "model")),     # LoRA B
+]
+_MOE_RULES = [  # expert-stacked weights, matched when rank >= 3 tail (E, d, f)
+    (r"(wi|wg)$", ("model", "data", None)),
+    (r"wo$", ("model", None, "data")),
+]
+
+# §Perf lever (ZeRO-1 for expert weights): when True, MoE expert *parameters*
+# are replicated along "data" (sharded on "model"/EP only) so forward/backward
+# issue NO per-layer FSDP gathers; only the optimizer state stays
+# data-sharded, turning per-layer weight gathers into one per-step
+# reduce-scatter(grad) + all-gather(params) pair inserted by SPMD at the
+# optimizer boundary.
+ZERO1_MOE = False
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    # expert-parallel weights: inside an "moe" scope with >= 3 dims
+    if ".moe." in path or path.endswith("moe"):
+        is_param_side = ".opt." not in path and not path.startswith("opt.")
+        if ZERO1_MOE and is_param_side:
+            for pat, tail in _MOE_RULES:
+                if re.search(pat, path) and len(shape) >= len(tail):
+                    want = [None] * (len(shape) - 3) + ["model", None, None]
+                    return resolve_spec(shape, want, mesh)
+        for pat, tail in _MOE_RULES:
+            if re.search(pat, path) and len(shape) >= len(tail):
+                want = [None] * (len(shape) - len(tail)) + list(tail)
+                return resolve_spec(shape, want, mesh)
+    for pat, tail in _RULES:
+        if re.search(pat, path) and len(shape) >= len(tail):
+            want = [None] * (len(shape) - len(tail)) + list(tail)
+            return resolve_spec(shape, want, mesh)
+    return P()  # norms, biases, scalars: replicated
+
+
+def cache_specs(tree, mesh: Mesh):
+    """Decode-state shardings: batch on ("pod","data"); KV heads on "model"
+    (falling back to head_dim), SSM heads / conv channels on "model".
+
+    Positions are taken from the right so leading layer-stack dims never
+    matter: kv [..., B, S, KH, Dh]; conv [..., B, K-1, C]; ssm [..., B, H, N, P].
+    """
+    b_ax = batch_axes(mesh)
+    msz = _axis_size(mesh, "model")
+
+    def spec_for(path: str, shape) -> P:
+        nd = len(shape)
+        want: list = [None] * nd
+        if path.endswith(".k") or path.endswith(".v"):
+            want[nd - 4] = b_ax
+            if shape[nd - 2] % msz == 0:
+                want[nd - 2] = "model"
+            elif shape[nd - 1] % msz == 0:
+                want[nd - 1] = "model"
+        elif path.endswith(".conv"):
+            want[nd - 3] = b_ax
+            want[nd - 1] = "model"
+        elif path.endswith(".ssm"):
+            want[nd - 4] = b_ax
+            want[nd - 3] = "model"
+        elif path.endswith("pos") or nd == 0:
+            return P()
+        return resolve_spec(shape, want, mesh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        pstr = ".".join(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+                        for k in path)
+        specs.append(NamedSharding(mesh, spec_for(pstr, np.shape(leaf))))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_specs(params, mesh: Mesh):
+    """Pytree of NamedShardings matching ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        pstr = pstr.replace("/", ".")
+        specs.append(NamedSharding(mesh, _leaf_spec(pstr, np.shape(leaf), mesh)))
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,94 @@
+"""jit-able train / serve steps for every architecture.
+
+``make_train_step(cfg)`` returns a pure function
+    (state, batch) -> (state, metrics)
+suitable for ``jax.jit`` with in/out shardings from ``sharding.param_specs``.
+Microbatching (gradient accumulation) is a scan over microbatches with
+bf16-compressed gradient accumulation (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import lm
+from ..optim.adamw import AdamWState, adamw_init, adamw_update, cosine_schedule
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(cfg: ArchConfig, key) -> TrainState:
+    params = lm.init_lm(cfg, key)
+    return TrainState(params, adamw_init(params))
+
+
+def make_train_step(cfg: ArchConfig, *, peak_lr=3e-4, warmup=100, total=10_000,
+                    microbatch: Optional[int] = None, loss_chunk=512,
+                    q_chunk=512, kv_chunk=512, ssd_chunk=128):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: {"inputs": [B, T] or [B, T, D], "labels": [B, T]}.
+    """
+
+    def loss_fn(params, inputs, labels):
+        loss, metrics = lm.lm_loss(cfg, params, inputs, labels, remat=True,
+                                   loss_chunk=loss_chunk, q_chunk=q_chunk,
+                                   kv_chunk=kv_chunk, ssd_chunk=ssd_chunk)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        inputs, labels = batch["inputs"], batch["labels"]
+        if microbatch and microbatch < inputs.shape[0]:
+            nmb = inputs.shape[0] // microbatch
+            mb_in = inputs.reshape((nmb, microbatch) + inputs.shape[1:])
+            mb_lb = labels.reshape((nmb, microbatch) + labels.shape[1:])
+
+            def mb_body(acc, mb):
+                (l, m), g = grad_fn(state.params, mb[0], mb[1])
+                # bf16 accumulation halves the carried payload (compression)
+                g16 = jax.tree.map(lambda x: x.astype(jnp.bfloat16), g)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g16), acc_l + l), m
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.bfloat16), state.params)
+            (gsum, lsum), ms = jax.lax.scan(mb_body, (zero, jnp.zeros(())),
+                                            (mb_in, mb_lb))
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / nmb, gsum)
+            loss = lsum / nmb
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        else:
+            (loss, metrics), grads = grad_fn(state.params, inputs, labels)
+
+        # +1: the schedule is evaluated for the step being TAKEN (lr(0)=0
+        # would silently no-op the first optimizer step)
+        lr = cosine_schedule(state.opt.step + 1, peak_lr=peak_lr, warmup=warmup,
+                             total=total)
+        new_params, new_opt, om = adamw_update(grads, state.opt, state.params, lr=lr)
+        metrics = dict(metrics, loss=loss, lr=lr, **om)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """Returns serve_step(params, state, tokens) -> (next_tokens, logits, state).
+
+    Greedy decode of one token for the whole batch.
+    """
+
+    def serve_step(params, state: lm.DecodeState, tokens):
+        logits, state = lm.decode_step(cfg, params, tokens, state)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, state
+
+    return serve_step

@@ -1,0 +1,23 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device override is
+# confined to launch/dryrun.py per the dry-run spec).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_powerlaw_csr(n=200, seed=0, zipf=1.8, cap=500, n_cols=None):
+    """Shared helper: small power-law CSR graph."""
+    from repro.core.graph import csr_from_edges
+    rng = np.random.default_rng(seed)
+    deg = np.minimum(rng.zipf(zipf, n), cap)
+    src = np.repeat(np.arange(n), deg)
+    dst = rng.integers(0, n_cols or n, len(src))
+    return csr_from_edges(src, dst, n_cols or n)

@@ -1,0 +1,106 @@
+"""Attention paths vs a naive dense reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (KVCache, _project_qkv, attention_decode,
+                                    attention_forward, banded_attention,
+                                    chunked_attention, init_attention)
+from repro.models.layers import rope_table
+
+
+def naive(q, k, v, causal=True, window=None, softcap=None, scale=None):
+    B, T, H, D = q.shape
+    G = H // k.shape[2]
+    kk, vv = jnp.repeat(k, G, 2), jnp.repeat(v, G, 2)
+    scale = D ** -0.5 if scale is None else scale
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   kk.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(T)
+    m = jnp.ones((T, T), bool)
+    if causal:
+        m &= pos[:, None] >= pos[None, :]
+    if window:
+        m &= pos[:, None] - pos[None, :] < window
+    s = jnp.where(m[None, None], s, -1e30)
+    return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1),
+                      vv.astype(jnp.float32))
+
+
+@pytest.fixture(scope="module")
+def qkv():
+    B, T, D, H, KH, dh = 2, 64, 32, 4, 2, 8
+    p = init_attention(jax.random.PRNGKey(0), D, H, KH, dh, qkv_bias=True,
+                       dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, D))
+    cos, sin = rope_table(jnp.arange(T), dh, 1e4)
+    return p, x, _project_qkv(p, x, H, KH, dh, cos, sin)
+
+
+@pytest.mark.parametrize("causal,window,softcap,qc,kc", [
+    (True, None, None, 16, 16), (True, None, None, 64, 8),
+    (True, 16, None, 16, 16), (False, None, None, 8, 32),
+    (True, None, 30.0, 16, 16), (True, 24, 50.0, 8, 8),
+])
+def test_chunked_matches_naive(qkv, causal, window, softcap, qc, kc):
+    _, _, (q, k, v) = qkv
+    ref = naive(q, k, v, causal, window, softcap)
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap, q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("window,qc", [(16, 16), (8, 32), (24, 8)])
+def test_banded_matches_naive(qkv, window, qc):
+    _, _, (q, k, v) = qkv
+    ref = naive(q, k, v, True, window)
+    out = banded_attention(q, k, v, window=window, q_chunk=qc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-4)
+
+
+def test_decode_matches_prefill(qkv):
+    p, x, _ = qkv
+    B, T = x.shape[:2]
+    H, KH, dh = 4, 2, 8
+    full = attention_forward(p, x, n_heads=H, n_kv_heads=KH, d_head=dh,
+                             q_chunk=16, kv_chunk=16)
+    cache = KVCache.create(B, T, KH, dh, jnp.float32)
+    outs = []
+    for t in range(T):
+        o, cache = attention_decode(p, x[:, t:t + 1], cache, t, n_heads=H,
+                                    n_kv_heads=KH, d_head=dh, rope_theta=1e4)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=1e-5)
+
+
+def test_unrolled_scan_equivalence(qkv):
+    """SCAN_UNROLL (roofline probes) must not change numerics."""
+    import repro.models.attention as A
+    _, _, (q, k, v) = qkv
+    base = chunked_attention(q, k, v, q_chunk=16, kv_chunk=16)
+    A.SCAN_UNROLL = True
+    try:
+        unrolled = chunked_attention(q, k, v, q_chunk=16, kv_chunk=16)
+    finally:
+        A.SCAN_UNROLL = False
+    np.testing.assert_allclose(np.asarray(base), np.asarray(unrolled), atol=1e-6)
+
+
+def test_bf16_einsums_flag_tolerance(qkv):
+    """BF16_EINSUMS (§Perf lever) stays within bf16 tolerance of fp32 math."""
+    import repro.models.attention as A
+    _, _, (q, k, v) = qkv
+    base = chunked_attention(q, k, v, q_chunk=16, kv_chunk=16)
+    A.BF16_EINSUMS = True
+    try:
+        fast = chunked_attention(q, k, v, q_chunk=16, kv_chunk=16)
+    finally:
+        A.BF16_EINSUMS = False
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(base), atol=0.05,
+                               rtol=0.05)

@@ -1,0 +1,41 @@
+"""Integration: prefill + decode == full forward, per family (fp32 exact)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import lm
+
+
+def _fp32(tree):
+    return jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x, tree)
+
+
+@pytest.mark.parametrize("name", ["qwen1.5-32b", "gemma2-27b", "dbrx-132b",
+                                  "deepseek-moe-16b", "mamba2-780m", "zamba2-7b"])
+def test_prefill_decode_matches_forward(name):
+    cfg = get_reduced(name)
+    params = _fp32(lm.init_lm(cfg, jax.random.PRNGKey(0)))
+    B, T, EXTRA = 2, 16, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T + EXTRA), 0, cfg.vocab)
+    full = lm.lm_forward(cfg, params, toks, q_chunk=4, kv_chunk=4, ssd_chunk=4)
+    lg, st = lm.prefill_forward(cfg, params, toks[:, :T], q_chunk=4, kv_chunk=4,
+                                ssd_chunk=4)
+    st = lm.pad_prefill_caches(cfg, st, T + EXTRA)
+    st = st._replace(caches=_fp32(st.caches))
+    errs = [float(jnp.abs(lg - full[:, T - 1]).max())]
+    for t in range(EXTRA):
+        lg, st = lm.decode_step(cfg, params, toks[:, T + t:T + t + 1], st)
+        errs.append(float(jnp.abs(lg - full[:, T + t]).max()))
+    assert max(errs) < 1e-4, f"{name}: {errs}"
+
+
+def test_encoder_prefill_returns_frame_logits():
+    cfg = get_reduced("hubert-xlarge")
+    params = _fp32(lm.init_lm(cfg, jax.random.PRNGKey(0)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    logits, state = lm.prefill_forward(cfg, params, x, q_chunk=4, kv_chunk=4)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert state is None

@@ -1,0 +1,57 @@
+"""Dry-run machinery on 8 fake host devices (subprocess so the XLA flag does
+not leak into other tests): reduced configs x all shape kinds x small mesh."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, "src")
+    import jax
+    from repro.configs import get_reduced
+    from repro.configs.base import ShapeConfig
+    from repro.launch.dryrun import lower_and_compile, _cost_vector
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    out = {}
+    cells = [
+        ("qwen1.5-32b", ShapeConfig("t", "train", 64, 8)),
+        ("gemma2-27b", ShapeConfig("p", "prefill", 64, 4)),
+        ("deepseek-moe-16b", ShapeConfig("t", "train", 64, 8)),
+        ("mamba2-780m", ShapeConfig("d", "decode", 64, 8)),
+        ("zamba2-7b", ShapeConfig("d", "decode", 64, 8)),
+        ("hubert-xlarge", ShapeConfig("t", "train", 64, 8)),
+    ]
+    for name, shape in cells:
+        cfg = get_reduced(name)
+        lowered, compiled, dt = lower_and_compile(
+            cfg, shape, mesh, chunks={"q_chunk": 16, "kv_chunk": 16,
+                                      "loss_chunk": 16, "ssd_chunk": 8})
+        cv = _cost_vector(compiled)
+        ma = compiled.memory_analysis()
+        out[name + ":" + shape.kind] = {
+            "flops": cv["flops"], "coll": cv["coll"],
+            "temp": ma.temp_size_in_bytes}
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_all_families():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, cwd=os.path.dirname(os.path.dirname(__file__)),
+                       env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]
+    out = json.loads(line[len("RESULT "):])
+    assert len(out) == 6
+    for k, v in out.items():
+        assert v["flops"] > 0, k

@@ -1,0 +1,66 @@
+"""Deliverable (f): per-architecture smoke tests — reduced same-family config,
+one forward + one train step on CPU, asserting shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models import lm
+from repro.train.step import init_train_state, make_train_step
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_forward_and_train_step(name):
+    cfg = get_reduced(name)
+    key = jax.random.PRNGKey(0)
+    B, T = 2, 32
+    if cfg.frontend == "token":
+        inputs = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+    else:
+        inputs = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model),
+                                   jnp.float32).astype(jnp.bfloat16)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, cfg.vocab)
+
+    logits = lm.lm_forward(cfg, lm.init_lm(cfg, key), inputs,
+                           q_chunk=16, kv_chunk=16, ssd_chunk=8)
+    assert logits.shape == (B, T, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{name}: non-finite logits"
+
+    state = init_train_state(cfg, key)
+    step = make_train_step(cfg, loss_chunk=16, q_chunk=16, kv_chunk=16,
+                           ssd_chunk=8)
+    state2, metrics = jax.jit(step)(state, {"inputs": inputs, "labels": labels})
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) > 0
+    # every fp32 master weight moved (bf16 casts may round tiny deltas away)
+    m0 = jax.tree_util.tree_leaves(state.opt.master)
+    m1 = jax.tree_util.tree_leaves(state2.opt.master)
+    changed = sum(not np.array_equal(np.asarray(a), np.asarray(b))
+                  for a, b in zip(m0, m1))
+    assert changed == len(m0), f"{name}: only {changed}/{len(m0)} master leaves moved"
+
+
+@pytest.mark.parametrize("name,expected_b", [
+    ("qwen1.5-32b", 32.5e9), ("phi3-mini-3.8b", 3.8e9), ("gemma2-27b", 27.2e9),
+    ("internlm2-20b", 19.9e9), ("dbrx-132b", 132e9), ("deepseek-moe-16b", 16.4e9),
+    ("chameleon-34b", 34e9), ("mamba2-780m", 0.78e9), ("hubert-xlarge", 0.96e9),
+    ("zamba2-7b", 7.2e9),
+])
+def test_full_config_param_counts(name, expected_b):
+    """Full configs match published parameter counts within 20% (counted via
+    eval_shape; no allocation)."""
+    import functools
+    cfg = get_config(name)
+    sds = jax.eval_shape(functools.partial(lm.init_lm, cfg), jax.random.PRNGKey(0))
+    n = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(sds))
+    assert 0.8 * expected_b < n < 1.25 * expected_b, f"{name}: {n/1e9:.2f}B"
+
+
+def test_decode_state_shapes():
+    cfg = get_reduced("qwen1.5-32b")
+    st = lm.init_decode_state(cfg, batch=2, max_seq=64)
+    assert st.caches["kv"].k.shape == (cfg.n_layers, 2, 64, cfg.n_kv_heads,
+                                       cfg.d_head)
+    with pytest.raises(ValueError):
+        lm.init_decode_state(get_reduced("hubert-xlarge"), 2, 64)

@@ -1,0 +1,119 @@
+"""Property tests for the paper's Algorithms 1 & 2 (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import csr_from_edges, degree_sort_csr
+from repro.core.partition import (
+    balance_stats, block_level_partition, get_partition_patterns,
+    metadata_bytes, pack_slabs, warp_level_partition,
+)
+
+from conftest import make_powerlaw_csr
+
+
+def _graph(n, seed, zipf=1.7):
+    return degree_sort_csr(make_powerlaw_csr(n=n, seed=seed, zipf=zipf))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mbw,mwn", [(12, 32), (8, 16), (64, 4), (4, 64)])
+def test_patterns_paper_invariants(mbw, mwn):
+    p = get_partition_patterns(mbw, mwn, mode="paper")
+    assert p.deg_bound == mbw * mwn
+    for d in range(1, p.deg_bound):
+        f, br, wn = int(p.factor[d]), int(p.block_rows[d]), int(p.warp_nzs[d])
+        assert mbw % f == 0 and br == mbw // f          # factor divides warps
+        assert f * mwn >= d                              # Algorithm 1 guard
+        assert wn == -(-d // f)                          # ceil(d / factor)
+        assert br * d <= p.deg_bound                     # block capacity bound
+
+
+@pytest.mark.parametrize("mode", ["paper", "tpu"])
+def test_patterns_monotone_block_rows(mode):
+    p = get_partition_patterns(16, 16, mode=mode)
+    br = p.block_rows[1:]
+    assert np.all(np.diff(br.astype(int)) <= 0)  # higher degree -> fewer rows
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 invariants: every non-zero covered exactly once, in order
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 400), seed=st.integers(0, 10_000),
+       mode=st.sampled_from(["paper", "tpu"]),
+       mbw=st.sampled_from([4, 12, 32]), mwn=st.sampled_from([4, 16, 32]))
+def test_partition_covers_all_nnz(n, seed, mode, mbw, mwn):
+    g = _graph(n, seed)
+    pats = get_partition_patterns(mbw, mwn, mode=mode)
+    bp = block_level_partition(g, pats)
+    # blocks tile the nnz range contiguously and exactly
+    assert int(bp.nnz_blk.sum()) == g.nnz
+    pos = 0
+    for b in range(bp.num_blocks):
+        assert int(bp.meta[b, 1]) == pos, "blocks must tile nnz contiguously"
+        pos += int(bp.nnz_blk[b])
+    # rows covered exactly once (non-split) / split rows only via one row id
+    covered = np.zeros(g.n_rows, dtype=int)
+    for b in range(bp.num_blocks):
+        if bp.is_split[b]:
+            continue
+        r0, nr = int(bp.meta[b, 2]), int(bp.n_rows_blk[b])
+        covered[r0:r0 + nr] += 1
+    deg = np.diff(g.rowptr)
+    bound = pats.deg_bound
+    assert np.all(covered[(deg > 0) & (deg < bound)] == 1)
+    assert np.all(covered[deg == 0] == 0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(20, 300), seed=st.integers(0, 1000))
+def test_split_rows_capacity(n, seed):
+    g = _graph(n, seed, zipf=1.3)  # heavier tail -> split rows likely
+    pats = get_partition_patterns(4, 8, mode="paper")   # tiny bound = 32
+    bp = block_level_partition(g, pats)
+    assert np.all(bp.nnz_blk <= pats.deg_bound)
+    # split blocks of one row are consecutive and sum to the row degree
+    deg = np.diff(g.rowptr)
+    for r in np.flatnonzero(deg >= pats.deg_bound):
+        blocks = np.flatnonzero((bp.meta[:, 2] == r) & bp.is_split)
+        assert int(bp.nnz_blk[blocks].sum()) == deg[r]
+        assert np.all(np.diff(blocks) == 1)
+
+
+# ---------------------------------------------------------------------------
+# metadata economics (paper Eq. 1) + balance
+# ---------------------------------------------------------------------------
+def test_metadata_ratio_matches_eq1():
+    g = _graph(2000, 3)
+    pats = get_partition_patterns(12, 32, mode="paper")
+    bp = block_level_partition(g, pats)
+    wp = warp_level_partition(g, 32)
+    ratio = metadata_bytes(bp) / metadata_bytes(wp)
+    # Eq. 1: S_B/S_W ~= 1/avg_warps_per_block
+    warps_per_block = wp.num_warps / bp.num_blocks
+    assert ratio == pytest.approx(1.0 / warps_per_block, rel=1e-6)
+    assert ratio < 0.5  # block-level metadata is much smaller
+
+
+def test_balance_tpu_mode_beats_warp_level():
+    g = _graph(3000, 4)
+    pats = get_partition_patterns(256, 1, mode="tpu", max_rows_per_block=64)
+    bp = block_level_partition(g, pats)
+    wp = warp_level_partition(g, 32)
+    bs, ws = balance_stats(bp), balance_stats(wp)
+    assert bs["metadata_bytes"] < ws["metadata_bytes"]
+
+
+def test_pack_slabs_every_nz_exactly_once():
+    g = _graph(500, 7)
+    pats = get_partition_patterns(32, 8, mode="tpu")
+    bp = block_level_partition(g, pats)
+    slabs = pack_slabs(g, bp)
+    assert float(slabs["values"].sum()) == pytest.approx(float(g.values.sum()), rel=1e-5)
+    # padded slots must carry zero values
+    nnzs = bp.nnz_blk
+    for b in range(min(bp.num_blocks, 50)):
+        assert np.all(slabs["values"][b, nnzs[b]:] == 0)

@@ -1,0 +1,48 @@
+"""Roofline machinery: HLO collective parser + term arithmetic."""
+import pytest
+
+from repro.analysis.roofline import (HW, collective_bytes, model_flops_estimate,
+                                     roofline_terms)
+
+HLO = """
+ENTRY %main {
+  %ag = f32[3072,192]{1,0} all-gather(%p0), channel_id=1, replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = bf16[1024,512]{1,0} all-reduce(%x), channel_id=2, replica_groups=[16,16]<=[256]
+  %rs = f32[64,64]{1,0} reduce-scatter(%y), channel_id=3, replica_groups=[16,16]<=[256], dimensions={0}
+  %cp = f32[128]{0} collective-permute(%z), channel_id=4
+  %a2a = bf16[32,32]{1,0} all-to-all(%w), channel_id=5
+  %ard = f32[8,8]{1,0} all-reduce-done(%ar2)
+  %not-a-collective = f32[9999]{0} add(%a, %b)
+}
+"""
+
+
+def test_collective_parser_kinds_and_sizes():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 3072 * 192 * 4          # 1x result
+    assert out["all-reduce"] == 2 * 1024 * 512 * 2      # 2x ring, bf16
+    assert out["reduce-scatter"] == 64 * 64 * 4 * 16    # result x group
+    assert out["collective-permute"] == 128 * 4
+    assert out["all-to-all"] == 32 * 32 * 2
+    # -done halves are not double counted
+    assert sum(out.values()) < 10_000_000
+
+
+def test_done_ops_skipped():
+    txt = "%x = f32[100]{0} all-reduce-start(%a)\n%y = f32[100]{0} all-reduce-done(%x)"
+    out = collective_bytes(txt)
+    assert out["all-reduce"] == 2 * 100 * 4  # start counted once
+
+
+def test_roofline_terms_and_bottleneck():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 / 2}
+    rl = roofline_terms(cost, HLO, chips=256, model_flops=197e12 * 256 * 0.5)
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.memory_s == pytest.approx(0.5)
+    assert rl.bottleneck == "compute"
+    assert rl.useful_ratio == pytest.approx(0.5)
+
+
+def test_model_flops():
+    assert model_flops_estimate(1e9, 1e6, "train") == 6e15
+    assert model_flops_estimate(1e9, 1e6, "infer") == 2e15

@@ -1,0 +1,60 @@
+"""Sharding rules: divisibility fallback, cache specs, param specs."""
+import types
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import _leaf_spec, resolve_spec
+
+
+def fake_mesh(data=16, model=16, pod=None):
+    shape = ((pod,) if pod else ()) + (data, model)
+    names = (("pod",) if pod else ()) + ("data", "model")
+    return types.SimpleNamespace(axis_names=names, devices=np.zeros(shape))
+
+
+def test_resolve_divisible():
+    m = fake_mesh()
+    assert resolve_spec((64, 4096), ("data", "model"), m) == P("data", "model")
+
+
+def test_resolve_fallback_drops_nondividing_axis():
+    m = fake_mesh()
+    # 40 heads on a 16-way axis -> replicated, head_dim stays sharded
+    assert resolve_spec((64, 4096, 40, 128), (("data",), None, "model", None), m) \
+        == P(("data",), None, None, None)
+    assert resolve_spec((64, 4096, 40, 128), (None, None, None, "model"), m) \
+        == P(None, None, None, "model")
+
+
+def test_batch_axes_multipod():
+    m = fake_mesh(pod=2)
+    assert resolve_spec((256, 10), (("pod", "data"), None), m) == \
+        P(("pod", "data"), None)
+    # batch=1 cannot shard: falls back to replicated
+    assert resolve_spec((1, 10), (("pod", "data"), None), m) == P(None, None)
+
+
+def test_leaf_spec_rules():
+    m = fake_mesh()
+    # col-parallel weight (leading layer-stack dim replicated)
+    assert _leaf_spec("layers.attn.wq", (32, 4096, 4096), m) == \
+        P(None, "data", "model")
+    assert _leaf_spec("layers.attn.wo", (32, 4096, 4096), m) == \
+        P(None, "model", "data")
+    # expert-parallel MoE weights
+    assert _leaf_spec("layers.moe.wi", (40, 16, 6144, 10752), m) == \
+        P(None, "model", "data", None)
+    # norms replicate
+    assert _leaf_spec("layers.ln1.w", (32, 4096), m) == P()
+    # embedding: vocab on model, d_model FSDP
+    assert _leaf_spec("embed", (152064, 5120), m) == P("model", "data")
+
+
+def test_leaf_spec_divisibility_guard():
+    m = fake_mesh()
+    # vocab 504 (hubert) does not divide 16 -> replicated on that dim
+    spec = _leaf_spec("head", (1280, 504), m)
+    assert spec == P("data", None)

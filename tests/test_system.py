@@ -1,0 +1,107 @@
+"""End-to-end behaviour: GCN training converges through the paper's operator;
+LM training reduces loss; fault-tolerant loop resumes bit-identically."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_reduced
+from repro.core.graph import gcn_normalize
+from repro.data.graphs import make_power_law_graph, node_features, node_labels
+from repro.data.tokens import token_batch_fn
+from repro.models.gcn import GraphOp, gcn_forward, gcn_loss, init_gcn
+from repro.train.loop import train_loop
+from repro.train.step import init_train_state, make_train_step
+
+
+@pytest.mark.parametrize("variant", ["gcn", "sage", "gin"])
+def test_gcn_training_reduces_loss(variant):
+    n, d, classes = 120, 16, 4
+    g = gcn_normalize(make_power_law_graph(n, 600, seed=0))
+    aggr = GraphOp.build(g, backend="blocked")
+    X = jnp.asarray(node_features(n, d, 0))
+    y = jnp.asarray(node_labels(n, classes, 0))
+    params = init_gcn(jax.random.PRNGKey(0), [d, 32, classes], variant)
+
+    loss_fn = lambda p: gcn_loss(p, aggr, X, y, variant)
+    vg = jax.jit(jax.value_and_grad(loss_fn))
+    l0 = float(loss_fn(params))
+    lr = 0.05
+    for _ in range(60):
+        l, grads = vg(params)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    l1 = float(loss_fn(params))
+    # random labels: pure-aggregation GCN memorizes slower than SAGE/GIN
+    # (no self path), so the gate is a firm decrease, not a fixed ratio.
+    assert l1 < l0 - 0.1, f"{variant}: {l0} -> {l1}"
+
+
+def test_gcn_gradient_flows_through_spmm():
+    n, d = 60, 8
+    g = gcn_normalize(make_power_law_graph(n, 240, seed=1))
+    aggr = GraphOp.build(g, backend="blocked")
+    X = jnp.asarray(node_features(n, d, 1))
+    params = init_gcn(jax.random.PRNGKey(1), [d, 8, 3], "gcn")
+    grads = jax.grad(lambda p: gcn_loss(p, aggr, X,
+                                        jnp.zeros(n, jnp.int32)))(params)
+    gn = sum(float(jnp.abs(x).sum()) for x in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_lm_train_loss_decreases():
+    cfg = get_reduced("phi3-mini-3.8b")
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, peak_lr=5e-3, warmup=5, total=100,
+                                   loss_chunk=16, q_chunk=16, kv_chunk=16))
+    bf = token_batch_fn(batch=4, seq=32, vocab=cfg.vocab, seed=0)
+    losses = []
+    for s in range(25):
+        state, m = step(state, {k: jnp.asarray(v) for k, v in bf(s).items()})
+        losses.append(float(m["ce"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_fault_tolerant_resume_bit_identical(tmp_path):
+    """Crash mid-run, restart from checkpoint: final state equals an
+    uninterrupted run exactly (stateless data + deterministic step)."""
+    cfg = get_reduced("qwen1.5-32b")
+    bf_np = token_batch_fn(batch=2, seq=16, vocab=cfg.vocab, seed=1)
+    bf = lambda s: {k: jnp.asarray(v) for k, v in bf_np(s).items()}
+    step = jax.jit(make_train_step(cfg, loss_chunk=16, q_chunk=16, kv_chunk=16))
+
+    def fresh():
+        return init_train_state(cfg, jax.random.PRNGKey(3))
+
+    ref = train_loop(state=fresh(), train_step=step, batch_fn=bf, n_steps=8,
+                     ckpt=None, log_every=100, log_fn=lambda *_: None)
+
+    ck = CheckpointManager(str(tmp_path), keep=2)
+    with pytest.raises(RuntimeError):
+        train_loop(state=fresh(), train_step=step, batch_fn=bf, n_steps=8,
+                   ckpt=ck, ckpt_every=3, crash_at=5, log_every=100,
+                   log_fn=lambda *_: None)
+    assert ck.latest_step() == 3
+    out = train_loop(state=fresh(), train_step=step, batch_fn=bf, n_steps=8,
+                     ckpt=ck, ckpt_every=3, log_every=100, log_fn=lambda *_: None)
+    for a, b in zip(jax.tree_util.tree_leaves(ref["state"].params),
+                    jax.tree_util.tree_leaves(out["state"].params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_straggler_accounting():
+    import time
+
+    calls = {"n": 0}
+
+    def slow_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 8:
+            time.sleep(0.25)
+        return state, {"loss": jnp.asarray(1.0)}
+
+    out = train_loop(state={}, train_step=slow_step,
+                     batch_fn=lambda s: {}, n_steps=10, log_every=100,
+                     straggler_factor=3.0, log_fn=lambda *_: None)
+    assert out["stragglers"] >= 1
