@@ -5,6 +5,7 @@ Emits ``name,us_per_call,derived`` CSV. Sections:
   fig6      runtime vs RHS column dimension (16..128 + odd widths)
   table2    block-vs-warp partition + combined-warp ablations
   preproc   O(n) preprocessing scaling (paper §III-C)
+  serve     plan-cache amortization + batched multi-graph dispatch
   moe       beyond-paper: block dispatch for MoE
   roofline  summary rows from the dry-run results (if present)
 """
@@ -48,11 +49,11 @@ def _roofline_rows():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig5,fig6,table2,preproc,moe,roofline")
+                    help="comma list: fig5,fig6,table2,preproc,serve,moe,roofline")
     ap.add_argument("--budget-edges", type=int, default=200_000)
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else \
-        {"fig5", "fig6", "table2", "preproc", "moe", "roofline"}
+        {"fig5", "fig6", "table2", "preproc", "serve", "moe", "roofline"}
 
     print("name,us_per_call,derived")
     if "fig5" in want:
@@ -70,6 +71,10 @@ def main() -> None:
     if "preproc" in want:
         from .preprocessing import run as pp
         for r in pp():
+            print(r)
+    if "serve" in want:
+        from .serve_graphs import run as serve
+        for r in serve(budget_edges=args.budget_edges):
             print(r)
     if "moe" in want:
         from .moe_dispatch import run as moe

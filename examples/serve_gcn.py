@@ -1,0 +1,95 @@
+"""Serve GCN inference over a fleet of graphs through GraphServeEngine.
+
+    PYTHONPATH=src python examples/serve_gcn.py
+
+Simulates the serving north star at desk scale: several distinct graphs,
+repeated inference traffic. Every layer's aggregation A'.(XW) for ALL graphs
+in flight goes through ONE fused multi-graph SpMM dispatch; partition plans
+are built once per graph and then always hit the cache. The engine's answer
+is checked against the direct single-graph GraphOp path.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import gcn_normalize
+from repro.core.plan_cache import PartitionConfig
+from repro.data.graphs import make_power_law_graph, node_features
+from repro.models.gcn import GraphOp
+from repro.models.layers import dense_init
+from repro.serve.graph_engine import GraphRequest, GraphServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", type=int, default=4)
+    ap.add_argument("--nodes", type=int, default=600)
+    ap.add_argument("--edges", type=int, default=3600)
+    ap.add_argument("--dims", type=int, nargs="+", default=[32, 64, 16])
+    ap.add_argument("--rounds", type=int, default=3)
+    args = ap.parse_args()
+
+    engine = GraphServeEngine(config=PartitionConfig(),
+                              backend="blocked", max_graphs_per_batch=4)
+    graphs = {}
+    for i in range(args.graphs):
+        gid = f"g{i}"
+        g = gcn_normalize(make_power_law_graph(
+            args.nodes + 37 * i, args.edges + 101 * i, seed=i))
+        engine.register_graph(gid, g)
+        graphs[gid] = g
+    print(f"[serve_gcn] registered {args.graphs} graphs; "
+          f"cache builds={engine.cache.builds}")
+
+    # One shared GCN weight stack (dims[0] -> ... -> dims[-1]).
+    ks = jax.random.split(jax.random.PRNGKey(0), len(args.dims) - 1)
+    weights = [dense_init(k, a, b, jnp.float32)
+               for k, a, b in zip(ks, args.dims[:-1], args.dims[1:])]
+
+    def engine_forward(feats):  # {gid: [N, F]} -> logits per graph
+        h = dict(feats)
+        for li, w in enumerate(weights):
+            reqs = [GraphRequest(gid, jnp.dot(h[gid], w)) for gid in h]
+            for r in engine.serve(reqs):
+                h[r.graph_id] = (jax.nn.relu(r.out)
+                                 if li < len(weights) - 1 else r.out)
+        return h
+
+    feats = {gid: jnp.asarray(node_features(g.n_rows, args.dims[0], seed=i))
+             for i, (gid, g) in enumerate(graphs.items())}
+
+    t0 = time.perf_counter()
+    for rnd in range(args.rounds):
+        logits = engine_forward(feats)
+    dt = time.perf_counter() - t0
+
+    # Cross-check one graph against the direct (unbatched) operator path.
+    gid0 = next(iter(graphs))
+    aggr = GraphOp.build(graphs[gid0], backend="blocked",
+                         plan_cache=engine.cache)
+    h = feats[gid0]
+    for li, w in enumerate(weights):
+        h = aggr(jnp.dot(h, w))
+        if li < len(weights) - 1:
+            h = jax.nn.relu(h)
+    err = float(jnp.max(jnp.abs(h - logits[gid0])))
+    assert err < 1e-3, f"engine vs direct mismatch: {err}"
+
+    st = engine.stats()
+    print(f"[serve_gcn] {args.rounds} rounds x {len(weights)} layers x "
+          f"{args.graphs} graphs in {dt:.2f}s")
+    print(f"[serve_gcn] batches={st['batches_dispatched']} "
+          f"requests={st['requests_served']} "
+          f"requests/batch={st['requests_per_batch']:.1f} "
+          f"rows/s={st['rows_per_s']:.3g}")
+    print(f"[serve_gcn] plan cache: builds={st['cache_builds']} "
+          f"hits={st['cache_hits']} hit_rate={st['cache_hit_rate']:.3f} "
+          f"(partitioned each graph exactly once)")
+    print(f"[serve_gcn] engine vs direct GraphOp max|err| = {err:.2e}  OK")
+
+
+if __name__ == "__main__":
+    main()

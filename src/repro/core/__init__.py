@@ -1,3 +1,10 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from .plan_cache import (  # noqa: F401
+    PartitionConfig,
+    PartitionPlan,
+    PlanCache,
+    build_partition_plan,
+    graph_content_hash,
+)

@@ -1,0 +1,233 @@
+"""Partition-plan cache: amortize Accel-GCN preprocessing across requests.
+
+The paper's block-level partition (§III-C) exists to cut per-inference
+metadata overhead — but rebuilding the degree sort + pattern table + slab
+packing on *every* call throws that win away in a serving setting where the
+same graphs recur. This module factors the whole preprocessing pipeline into
+a content-addressed :class:`PartitionPlan` and caches finished plans in an
+LRU :class:`PlanCache` keyed by (graph content hash, partition config):
+
+* ``graph_content_hash`` — blake2b over the CSR arrays (structure AND edge
+  values), so A' and A'^T of the same graph, or the same topology with
+  different normalization, get distinct plans;
+* ``build_partition_plan`` — the one place the pipeline runs: degree sort ->
+  Algorithm 1 pattern table -> Algorithm 2 block emission -> slab packing ->
+  device staging. Everything downstream (AccelSpMM, the batched multi-graph
+  path, GraphServeEngine) consumes plans;
+* ``PlanCache`` — LRU with hit/miss/eviction counters and a ``builds``
+  counter tests and the serving engine use to assert "partitioned exactly
+  once per distinct (graph, config)".
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import CSRGraph, degree_sort_csr
+from .partition import (
+    BlockPartition,
+    block_level_partition,
+    get_partition_patterns,
+    pack_slabs,
+)
+
+__all__ = [
+    "PartitionConfig",
+    "PartitionPlan",
+    "PlanCache",
+    "graph_content_hash",
+    "build_partition_plan",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionConfig:
+    """Static knobs that change the partition layout (part of the cache key)."""
+
+    mode: str = "tpu"
+    max_block_warps: int = 64
+    max_warp_nzs: int = 4
+    max_rows_per_block: Optional[int] = None
+
+    @property
+    def deg_bound(self) -> int:
+        return self.max_block_warps * self.max_warp_nzs
+
+
+def graph_content_hash(g: CSRGraph) -> str:
+    """Content hash of a CSR matrix: shapes, structure and edge values.
+
+    Two graphs with the same topology but different values (e.g. before and
+    after GCN normalization) hash differently — the packed slabs differ.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64([g.n_rows, g.n_cols, g.nnz]).tobytes())
+    h.update(np.ascontiguousarray(g.rowptr, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(g.colidx, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(g.values, dtype=np.float32).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class PartitionPlan:
+    """A finished, device-staged partition of one graph under one config.
+
+    Immutable once built; shared freely between operators and serve batches.
+    ``slabs`` holds the kernel inputs (colidx/values/rowloc/out_row as device
+    arrays plus python ints R, C); ``inv_perm`` undoes the degree sort so
+    callers always see the ORIGINAL row order.
+    """
+
+    key: Tuple[str, PartitionConfig]
+    n_rows: int
+    n_cols: int
+    nnz: int
+    slabs: Dict
+    inv_perm: jax.Array          # original row -> sorted position
+    partition: BlockPartition
+    coo_row: jax.Array
+    coo_col: jax.Array
+    coo_val: jax.Array
+
+    @property
+    def graph_hash(self) -> str:
+        return self.key[0]
+
+    @property
+    def config(self) -> PartitionConfig:
+        return self.key[1]
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.slabs["colidx"].shape[0])
+
+    def device_bytes(self) -> int:
+        """Approximate device footprint of the staged plan (for cache stats)."""
+        total = 0
+        for v in list(self.slabs.values()) + [self.inv_perm, self.coo_row,
+                                              self.coo_col, self.coo_val]:
+            if hasattr(v, "nbytes"):
+                total += int(v.nbytes)
+        return total
+
+
+def build_partition_plan(g: CSRGraph, cfg: PartitionConfig,
+                         graph_hash: Optional[str] = None) -> PartitionPlan:
+    """Run the full O(n) preprocessing pipeline once and stage device buffers."""
+    g.validate()
+    gs = degree_sort_csr(g)
+    pats = get_partition_patterns(
+        cfg.max_block_warps, cfg.max_warp_nzs, mode=cfg.mode,
+        max_rows_per_block=cfg.max_rows_per_block)
+    bp = block_level_partition(gs, pats)
+    slabs_np = pack_slabs(gs, bp)
+    slabs = {k: jnp.asarray(v) for k, v in slabs_np.items()
+             if isinstance(v, np.ndarray)}
+    slabs["R"], slabs["C"] = slabs_np["R"], slabs_np["C"]
+
+    inv_perm = np.empty(gs.n_rows, dtype=np.int64)
+    inv_perm[gs.perm] = np.arange(gs.n_rows)
+
+    # COO is cheap to keep and doubles as the gradient/baseline path.
+    row_of = np.repeat(np.arange(g.n_rows), np.diff(g.rowptr))
+    return PartitionPlan(
+        key=(graph_hash or graph_content_hash(g), cfg),
+        n_rows=g.n_rows, n_cols=g.n_cols, nnz=g.nnz,
+        slabs=slabs, inv_perm=jnp.asarray(inv_perm), partition=bp,
+        coo_row=jnp.asarray(row_of),
+        coo_col=jnp.asarray(g.colidx),
+        coo_val=jnp.asarray(g.values.astype(np.float32)),
+    )
+
+
+class PlanCache:
+    """LRU cache of :class:`PartitionPlan` keyed by (content hash, config).
+
+    ``capacity`` counts plans, not bytes: partition metadata scales with nnz
+    and serving workloads typically hold a small working set of graphs. All
+    counters are monotone; ``stats()`` snapshots them.
+    """
+
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError("PlanCache capacity must be >= 1")
+        self.capacity = capacity
+        self._plans: "OrderedDict[Tuple[str, PartitionConfig], PartitionPlan]" = \
+            OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.builds = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, key) -> bool:
+        return key in self._plans
+
+    def get_or_build(self, g: CSRGraph, cfg: PartitionConfig) -> PartitionPlan:
+        """Return the cached plan for (g, cfg), building it on first sight."""
+        key = (graph_content_hash(g), cfg)
+        return self.get_by_key(
+            key, lambda: build_partition_plan(g, cfg, graph_hash=key[0]))
+
+    def get_by_key(self, key: Tuple[str, PartitionConfig],
+                   build_fn) -> PartitionPlan:
+        """Counter-tracked lookup for callers that already hold the key (the
+        serving engine hashes each graph once at registration, not per
+        request); ``build_fn`` runs only on a miss."""
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.hits += 1
+            self._plans.move_to_end(key)
+            return plan
+        self.misses += 1
+        plan = build_fn()
+        self.builds += 1
+        self._insert(key, plan)
+        return plan
+
+    def lookup(self, key: Tuple[str, PartitionConfig]) -> Optional[PartitionPlan]:
+        """Counter-free peek (used by stats tooling); refreshes LRU order."""
+        plan = self._plans.get(key)
+        if plan is not None:
+            self._plans.move_to_end(key)
+        return plan
+
+    def put(self, plan: PartitionPlan) -> None:
+        """Insert an externally-built plan (e.g. shipped from another host)."""
+        self._insert(plan.key, plan)
+
+    def _insert(self, key, plan: PartitionPlan) -> None:
+        if key in self._plans:
+            self._plans.move_to_end(key)
+        self._plans[key] = plan
+        while len(self._plans) > self.capacity:
+            self._plans.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._plans.clear()
+
+    def keys(self):
+        return list(self._plans.keys())
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "size": len(self._plans),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "builds": self.builds,
+            "evictions": self.evictions,
+            "hit_rate": self.hits / total if total else 0.0,
+            "device_bytes": sum(p.device_bytes()
+                                for p in self._plans.values()),
+        }

@@ -19,13 +19,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import CSRGraph, degree_sort_csr
-from .partition import (
-    BlockPartition,
-    block_level_partition,
-    get_partition_patterns,
-    pack_slabs,
-    warp_level_partition,
+from .graph import CSRGraph
+from .partition import BlockPartition, warp_level_partition
+from .plan_cache import (
+    PartitionConfig,
+    PartitionPlan,
+    PlanCache,
+    build_partition_plan,
 )
 from ..kernels import ops as kops
 
@@ -50,6 +50,7 @@ class AccelSpMM:
     warp_slabs: Optional[dict] = None
     dense: Optional[jax.Array] = None
     partition: Optional[BlockPartition] = None
+    plan: Optional[PartitionPlan] = None  # staged preprocessing this op wraps
 
     def __call__(self, x: jax.Array, backend: Optional[Backend] = None) -> jax.Array:
         be = backend or self.backend
@@ -74,6 +75,17 @@ class AccelSpMM:
         raise ValueError(f"unknown backend {be!r}")
 
 
+def accel_spmm_from_plan(plan: PartitionPlan,
+                         backend: Backend = "blocked") -> AccelSpMM:
+    """Wrap a finished (possibly cached) partition plan as a callable operator."""
+    return AccelSpMM(
+        n_rows=plan.n_rows, n_cols=plan.n_cols, nnz=plan.nnz, backend=backend,
+        slabs=plan.slabs, inv_perm=plan.inv_perm, partition=plan.partition,
+        coo_row=plan.coo_row, coo_col=plan.coo_col, coo_val=plan.coo_val,
+        plan=plan,
+    )
+
+
 def make_accel_spmm(
     g: CSRGraph,
     *,
@@ -83,28 +95,17 @@ def make_accel_spmm(
     backend: Backend = "blocked",
     with_baselines: bool = False,
     warp_ng: int = 32,
+    plan_cache: Optional[PlanCache] = None,
 ) -> AccelSpMM:
-    """Run the O(n) preprocessing and stage device buffers."""
-    g.validate()
-    gs = degree_sort_csr(g)
-    pats = get_partition_patterns(max_block_warps, max_warp_nzs, mode=mode)
-    bp = block_level_partition(gs, pats)
-    slabs_np = pack_slabs(gs, bp)
-    slabs = {k: jnp.asarray(v) for k, v in slabs_np.items() if isinstance(v, np.ndarray)}
-    slabs["R"], slabs["C"] = slabs_np["R"], slabs_np["C"]
-
-    inv_perm = np.empty(gs.n_rows, dtype=np.int64)
-    inv_perm[gs.perm] = np.arange(gs.n_rows)
-
-    op = AccelSpMM(
-        n_rows=g.n_rows, n_cols=g.n_cols, nnz=g.nnz, backend=backend,
-        slabs=slabs, inv_perm=jnp.asarray(inv_perm), partition=bp,
-    )
-    # COO baseline is cheap to keep around; it is also the gradient path.
-    row_of = np.repeat(np.arange(g.n_rows), np.diff(g.rowptr))
-    op.coo_row = jnp.asarray(row_of)
-    op.coo_col = jnp.asarray(g.colidx)
-    op.coo_val = jnp.asarray(g.values.astype(np.float32))
+    """Build the operator; with ``plan_cache`` the O(n) preprocessing runs at
+    most once per distinct (graph content, partition config)."""
+    cfg = PartitionConfig(mode=mode, max_block_warps=max_block_warps,
+                          max_warp_nzs=max_warp_nzs)
+    if plan_cache is not None:
+        plan = plan_cache.get_or_build(g, cfg)
+    else:
+        plan = build_partition_plan(g, cfg)
+    op = accel_spmm_from_plan(plan, backend=backend)
 
     if with_baselines:
         wp = warp_level_partition(g, ng_size=warp_ng)

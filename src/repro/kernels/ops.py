@@ -17,8 +17,16 @@ from .spmm_accel import spmm_block_slabs
 from .spmm_hbm import spmm_block_slabs_hbm
 from .grouped_matmul import grouped_matmul
 
-__all__ = ["spmm_pallas", "spmm_pallas_hbm", "spmm_blocked",
+__all__ = ["spmm_pallas", "spmm_pallas_hbm", "spmm_blocked", "spmm_batched",
            "grouped_matmul_pallas", "grouped_matmul_blocked"]
+
+
+def spmm_batched(slab_list, x_list, n_rows_list, *, backend="pallas",
+                 interpret=True, pad_blocks_to=None):
+    """Fused multi-graph SpMM (one pallas_call for the whole batch)."""
+    from .spmm_batched import spmm_batched as _batched
+    return _batched(slab_list, x_list, n_rows_list, backend=backend,
+                    interpret=interpret, pad_blocks_to=pad_blocks_to)
 
 
 def spmm_pallas(slabs, x, n_rows, *, interpret=True):

@@ -186,6 +186,8 @@ def _probe_plan(cfg: ArchConfig):
 
 def _cost_vector(compiled, lowered=None) -> Dict[str, float]:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per computation
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     coll = collective_bytes(txt)
     return {

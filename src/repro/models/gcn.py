@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.graph import CSRGraph, csr_from_edges, gcn_normalize
+from ..core.plan_cache import PlanCache
 from ..core.spmm import AccelSpMM, make_accel_spmm
 from .layers import dense_init
 
@@ -37,9 +38,15 @@ class GraphOp:
     bwd: AccelSpMM  # operator for A'^T
 
     @classmethod
-    def build(cls, g_norm: CSRGraph, backend: str = "blocked", **kw) -> "GraphOp":
-        return cls(fwd=make_accel_spmm(g_norm, backend=backend, **kw),
-                   bwd=make_accel_spmm(_transpose_csr(g_norm), backend=backend, **kw))
+    def build(cls, g_norm: CSRGraph, backend: str = "blocked",
+              plan_cache: Optional[PlanCache] = None, **kw) -> "GraphOp":
+        """With ``plan_cache``, both A' and A'^T plans are cached: rebuilding
+        the op for a recurring graph does zero partitioning work."""
+        return cls(
+            fwd=make_accel_spmm(g_norm, backend=backend,
+                                plan_cache=plan_cache, **kw),
+            bwd=make_accel_spmm(_transpose_csr(g_norm), backend=backend,
+                                plan_cache=plan_cache, **kw))
 
     def __call__(self, x: jax.Array) -> jax.Array:
         op_f, op_b = self.fwd, self.bwd

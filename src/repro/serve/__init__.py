@@ -1,1 +1,2 @@
 from .engine import ServeEngine  # noqa: F401
+from .graph_engine import GraphRequest, GraphServeEngine  # noqa: F401

@@ -1,8 +1,16 @@
 import os
+import sys
 
 # Tests must see the single real CPU device (the 512-device override is
 # confined to launch/dryrun.py per the dry-run spec).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Prefer the real hypothesis (installed in CI via requirements-dev.txt); fall
+# back to the deterministic shim in tests/_compat for hermetic environments.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_compat"))
 
 import numpy as np
 import pytest

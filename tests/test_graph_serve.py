@@ -1,0 +1,156 @@
+"""GraphServeEngine: correctness, batching behavior, cache amortization."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import gcn_normalize
+from repro.core.plan_cache import PartitionConfig, PlanCache
+from repro.core.spmm import make_accel_spmm
+from repro.serve.graph_engine import GraphRequest, GraphServeEngine
+
+from conftest import make_powerlaw_csr
+
+
+def _setup(n_graphs=3, backend="blocked", **ekw):
+    engine = GraphServeEngine(backend=backend, **ekw)
+    graphs, feats = {}, {}
+    rng = np.random.default_rng(0)
+    for i in range(n_graphs):
+        gid = f"g{i}"
+        g = gcn_normalize(make_powerlaw_csr(n=90 + 25 * i, seed=i))
+        engine.register_graph(gid, g)
+        graphs[gid] = g
+        feats[gid] = jnp.asarray(rng.normal(size=(g.n_rows, 16 + 8 * i)),
+                                 dtype=jnp.float32)
+    return engine, graphs, feats
+
+
+@pytest.mark.parametrize("backend", ["blocked", "pallas"])
+def test_serve_matches_direct_operator(backend):
+    engine, graphs, feats = _setup(backend=backend)
+    reqs = [GraphRequest(gid, feats[gid]) for gid in graphs]
+    engine.serve(reqs)
+    for r in reqs:
+        direct = make_accel_spmm(graphs[r.graph_id])(feats[r.graph_id])
+        np.testing.assert_allclose(np.asarray(r.out), np.asarray(direct),
+                                   atol=1e-4, rtol=1e-4)
+        assert r.latency_s is not None and r.latency_s > 0
+
+
+def test_same_graph_served_twice_partitions_once():
+    """Acceptance criterion, end to end through the engine."""
+    engine, graphs, feats = _setup(n_graphs=1)
+    builds_after_register = engine.cache.builds
+    assert builds_after_register == 1
+    engine.serve([GraphRequest("g0", feats["g0"])])
+    engine.serve([GraphRequest("g0", feats["g0"] * 2)])
+    assert engine.cache.builds == 1, "serving must never re-partition"
+    assert engine.cache.hits >= 2
+
+
+def test_same_graph_requests_fuse_along_features():
+    """N same-graph requests -> one dispatch; each gets its own columns back."""
+    engine, graphs, feats = _setup(n_graphs=1)
+    x = feats["g0"]
+    reqs = [GraphRequest("g0", x),
+            GraphRequest("g0", 3.0 * x),
+            GraphRequest("g0", x[:, :5])]
+    engine.serve(reqs)
+    assert engine.batches_dispatched == 1
+    assert engine.requests_served == 3
+    direct = make_accel_spmm(graphs["g0"])
+    np.testing.assert_allclose(np.asarray(reqs[0].out),
+                               np.asarray(direct(x)), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(reqs[1].out),
+                               np.asarray(direct(3.0 * x)),
+                               atol=1e-4, rtol=1e-4)
+    assert reqs[2].out.shape == (graphs["g0"].n_rows, 5)
+    np.testing.assert_allclose(np.asarray(reqs[2].out),
+                               np.asarray(direct(x[:, :5])),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_batch_splitting_respects_max_graphs():
+    engine, graphs, feats = _setup(n_graphs=5, max_graphs_per_batch=2)
+    reqs = [GraphRequest(gid, feats[gid]) for gid in graphs]
+    engine.serve(reqs)
+    assert engine.batches_dispatched == 3  # ceil(5 / 2)
+    for r in reqs:
+        direct = make_accel_spmm(graphs[r.graph_id])(feats[r.graph_id])
+        np.testing.assert_allclose(np.asarray(r.out), np.asarray(direct),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_unknown_graph_rejected():
+    engine, _, feats = _setup(n_graphs=1)
+    with pytest.raises(KeyError, match="not registered"):
+        engine.serve([GraphRequest("nope", feats["g0"])])
+
+
+def test_bad_feature_shape_rejected():
+    engine, graphs, _ = _setup(n_graphs=1)
+    wrong = jnp.zeros((graphs["g0"].n_rows + 1, 4), jnp.float32)
+    with pytest.raises(ValueError, match="expected"):
+        engine.serve([GraphRequest("g0", wrong)])
+
+
+def test_malformed_request_fails_before_any_dispatch():
+    """Validation is all-or-nothing: a bad request in a later batch must not
+    leave earlier batches served and counters mutated."""
+    engine, graphs, feats = _setup(n_graphs=3, max_graphs_per_batch=1)
+    bad = jnp.zeros((5, 5), jnp.float32)
+    reqs = [GraphRequest("g0", feats["g0"]),
+            GraphRequest("g1", feats["g1"]),
+            GraphRequest("g2", bad)]
+    with pytest.raises(ValueError, match="expected"):
+        engine.serve(reqs)
+    assert engine.batches_dispatched == 0
+    assert engine.requests_served == 0
+    assert all(r.out is None for r in reqs)
+
+
+def test_serve_does_not_rehash_registered_graphs(monkeypatch):
+    """Steady-state dispatches must not recompute the content hash."""
+    import repro.core.plan_cache as pc
+    engine, graphs, feats = _setup(n_graphs=2)
+
+    def boom(_g):
+        raise AssertionError("content hash recomputed on the serve hot path")
+    monkeypatch.setattr(pc, "graph_content_hash", boom)
+    reqs = [GraphRequest(gid, feats[gid]) for gid in graphs]
+    engine.serve(reqs)
+    assert all(r.out is not None for r in reqs)
+
+
+def test_stats_accumulate_and_cache_is_shared():
+    shared = PlanCache(capacity=8)
+    engine = GraphServeEngine(cache=shared, backend="blocked")
+    g = gcn_normalize(make_powerlaw_csr(n=70, seed=9))
+    engine.register_graph("a", g)
+    x = jnp.ones((g.n_rows, 4), jnp.float32)
+    engine.serve([GraphRequest("a", x)])
+    engine.serve([GraphRequest("a", x)])
+    st = engine.stats()
+    assert st["requests_served"] == 2
+    assert st["batches_dispatched"] == 2
+    assert st["rows_served"] == 2 * g.n_rows
+    assert st["total_serve_s"] > 0 and st["rows_per_s"] > 0
+    assert st["cache_builds"] == 1 and st["cache_hits"] >= 2
+    # the same external cache also serves non-engine callers without rebuild
+    make_accel_spmm(g, plan_cache=shared)
+    assert shared.builds == 1
+
+
+def test_reregister_same_content_is_noop_hit():
+    engine, graphs, _ = _setup(n_graphs=1)
+    assert engine.cache.builds == 1
+    engine.register_graph("g0", graphs["g0"])
+    assert engine.cache.builds == 1 and engine.cache.hits >= 1
+
+
+def test_serve_one_convenience():
+    engine, graphs, feats = _setup(n_graphs=1)
+    out = engine.serve_one("g0", feats["g0"])
+    direct = make_accel_spmm(graphs["g0"])(feats["g0"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct),
+                               atol=1e-4, rtol=1e-4)

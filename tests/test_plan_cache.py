@@ -1,0 +1,136 @@
+"""PlanCache semantics: hit/miss/build counters, LRU eviction, key hygiene."""
+import numpy as np
+import pytest
+
+from repro.core.graph import gcn_normalize
+from repro.core.plan_cache import (
+    PartitionConfig, PlanCache, build_partition_plan, graph_content_hash,
+)
+from repro.core.spmm import make_accel_spmm
+from repro.models.gcn import GraphOp
+
+from conftest import make_powerlaw_csr
+
+
+def _g(seed, n=120):
+    return gcn_normalize(make_powerlaw_csr(n=n, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# content hash
+# ---------------------------------------------------------------------------
+def test_hash_deterministic_and_distinct():
+    g1, g2 = _g(0), _g(1)
+    assert graph_content_hash(g1) == graph_content_hash(_g(0))
+    assert graph_content_hash(g1) != graph_content_hash(g2)
+
+
+def test_hash_sensitive_to_values_not_just_structure():
+    g = _g(3)
+    g2 = type(g)(rowptr=g.rowptr, colidx=g.colidx,
+                 values=g.values * 2.0, n_cols=g.n_cols)
+    assert graph_content_hash(g) != graph_content_hash(g2)
+
+
+def test_same_shape_different_colidx_distinct():
+    # identical rowptr/values envelope, permuted column targets -> distinct
+    a = make_powerlaw_csr(n=80, seed=10)
+    b = type(a)(rowptr=a.rowptr, colidx=(a.colidx + 1) % a.n_cols,
+                values=a.values, n_cols=a.n_cols)
+    assert graph_content_hash(a) != graph_content_hash(b)
+
+
+# ---------------------------------------------------------------------------
+# hit / miss / build counters
+# ---------------------------------------------------------------------------
+def test_counters_hit_miss_build():
+    cache = PlanCache(capacity=4)
+    g = _g(0)
+    cfg = PartitionConfig()
+    p1 = cache.get_or_build(g, cfg)
+    assert (cache.hits, cache.misses, cache.builds) == (0, 1, 1)
+    p2 = cache.get_or_build(g, cfg)
+    assert (cache.hits, cache.misses, cache.builds) == (1, 1, 1)
+    assert p1 is p2, "hit must return the SAME staged plan object"
+    st = cache.stats()
+    assert st["hit_rate"] == pytest.approx(0.5)
+    assert st["size"] == 1 and st["device_bytes"] > 0
+
+
+def test_config_is_part_of_key():
+    cache = PlanCache(capacity=8)
+    g = _g(2)
+    cache.get_or_build(g, PartitionConfig(mode="tpu"))
+    cache.get_or_build(g, PartitionConfig(mode="paper", max_block_warps=8,
+                                          max_warp_nzs=16))
+    cache.get_or_build(g, PartitionConfig(mode="tpu", max_block_warps=32,
+                                          max_warp_nzs=8))
+    assert cache.builds == 3 and cache.hits == 0
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction
+# ---------------------------------------------------------------------------
+def test_lru_eviction_order():
+    cache = PlanCache(capacity=2)
+    cfg = PartitionConfig()
+    g0, g1, g2 = _g(0), _g(1), _g(2)
+    k0 = (graph_content_hash(g0), cfg)
+    cache.get_or_build(g0, cfg)
+    cache.get_or_build(g1, cfg)
+    cache.get_or_build(g0, cfg)          # refresh g0 -> g1 is now LRU
+    cache.get_or_build(g2, cfg)          # evicts g1
+    assert cache.evictions == 1 and len(cache) == 2
+    assert k0 in cache
+    assert (graph_content_hash(g1), cfg) not in cache
+    cache.get_or_build(g1, cfg)          # rebuilt: a miss, not a hit
+    assert cache.builds == 4 and cache.evictions == 2
+
+
+def test_capacity_one_thrash_still_correct():
+    cache = PlanCache(capacity=1)
+    cfg = PartitionConfig()
+    for seed in (0, 1, 0, 1):
+        p = cache.get_or_build(_g(seed), cfg)
+        assert p.n_rows == 120
+    assert cache.builds == 4 and cache.hits == 0 and cache.evictions == 3
+
+
+# ---------------------------------------------------------------------------
+# integration: operators and models through the cache
+# ---------------------------------------------------------------------------
+def test_make_accel_spmm_shares_plan():
+    cache = PlanCache()
+    g = _g(5)
+    op1 = make_accel_spmm(g, plan_cache=cache)
+    op2 = make_accel_spmm(g, plan_cache=cache)
+    assert cache.builds == 1 and cache.hits == 1
+    assert op1.plan is op2.plan
+    # and cached operators still compute the right thing
+    import jax.numpy as jnp
+    from repro.kernels.ref import csr_spmm_ref
+    X = jnp.asarray(np.random.default_rng(0).normal(size=(g.n_rows, 24)),
+                    dtype=jnp.float32)
+    ref = np.asarray(csr_spmm_ref(g.rowptr, g.colidx, g.values, X))
+    np.testing.assert_allclose(np.asarray(op2(X)), ref, atol=1e-3, rtol=1e-3)
+
+
+def test_graphop_build_partitions_once_per_matrix():
+    """Acceptance: serving the same graph twice partitions exactly once."""
+    cache = PlanCache()
+    g = _g(7)
+    GraphOp.build(g, plan_cache=cache)        # builds A' and A'^T plans
+    assert cache.builds == 2 and cache.misses == 2
+    GraphOp.build(g, plan_cache=cache)        # all hits, zero new builds
+    assert cache.builds == 2 and cache.hits == 2
+
+
+def test_plan_roundtrip_without_cache_matches():
+    g = _g(9)
+    cfg = PartitionConfig()
+    p_direct = build_partition_plan(g, cfg)
+    p_cached = PlanCache().get_or_build(g, cfg)
+    assert p_direct.key == p_cached.key
+    assert p_direct.num_blocks == p_cached.num_blocks
+    np.testing.assert_array_equal(np.asarray(p_direct.slabs["colidx"]),
+                                  np.asarray(p_cached.slabs["colidx"]))
