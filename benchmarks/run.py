@@ -6,6 +6,8 @@ Emits ``name,us_per_call,derived`` CSV. Sections:
   table2    block-vs-warp partition + combined-warp ablations
   preproc   O(n) preprocessing scaling (paper §III-C)
   serve     plan-cache amortization + batched multi-graph dispatch
+  routing   resident vs windowed vs HBM-gather vs auto at the VMEM
+            boundaries (mixes that straddle the routing thresholds)
   moe       beyond-paper: block dispatch for MoE
   roofline  summary rows from the dry-run results (if present)
 """
@@ -49,11 +51,13 @@ def _roofline_rows():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig5,fig6,table2,preproc,serve,moe,roofline")
+                    help="comma list: fig5,fig6,table2,preproc,serve,"
+                         "routing,moe,roofline")
     ap.add_argument("--budget-edges", type=int, default=200_000)
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else \
-        {"fig5", "fig6", "table2", "preproc", "serve", "moe", "roofline"}
+        {"fig5", "fig6", "table2", "preproc", "serve", "routing", "moe",
+         "roofline"}
 
     print("name,us_per_call,derived")
     if "fig5" in want:
@@ -75,6 +79,10 @@ def main() -> None:
     if "serve" in want:
         from .serve_graphs import run as serve
         for r in serve(budget_edges=args.budget_edges):
+            print(r)
+    if "routing" in want:
+        from .spmm_routing import run as routing
+        for r in routing(budget_edges=args.budget_edges):
             print(r)
     if "moe" in want:
         from .moe_dispatch import run as moe

@@ -24,8 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.plan_cache import PartitionConfig, PlanCache
+from repro.kernels.ops import spmm_auto
 from repro.kernels.spmm_batched import spmm_batched
-from repro.kernels.spmm_accel import spmm_block_slabs
 from repro.serve.graph_engine import GraphRequest, GraphServeEngine
 
 from .common import csv_row, staged_graph, time_call
@@ -58,14 +58,17 @@ def run(budget_edges: int = 200_000, feat: int = 64) -> List[str]:
         xs.append(jnp.asarray(rng.normal(size=(g.n_rows, feat)), jnp.float32))
 
     # G individual dispatches vs one fused dispatch over the same work.
+    # Both go through the VMEM router: at real sizes the per-graph features
+    # (Pubmed ~10k rows) and, always, the concatenated batch exceed the
+    # resident kernel's N_pad <= 4096 budget, which now raises instead of
+    # silently compiling an oversized tile.
     def individual():
-        return [spmm_block_slabs(p.slabs["colidx"], p.slabs["values"],
-                                 p.slabs["rowloc"], p.slabs["out_row"],
-                                 x, p.n_rows) for p, x in zip(plans, xs)]
+        return [spmm_auto(p.slabs, x, p.n_rows)
+                for p, x in zip(plans, xs)]
 
     def batched():
         return spmm_batched([p.slabs for p in plans], xs,
-                            [p.n_rows for p in plans], backend="pallas")
+                            [p.n_rows for p in plans], backend="auto")
 
     # Pre-merged: the host-side slab merge done once (what the engine
     # amortizes for steady traffic), timing only the single fused dispatch.
@@ -73,14 +76,12 @@ def run(budget_edges: int = 200_000, feat: int = 64) -> List[str]:
     merged, _, _, n_out = batch_graph_slabs(
         [p.slabs for p in plans], [p.n_rows for p in plans],
         [p.n_cols for p in plans])
-    m_dev = {k: jnp.asarray(v) for k, v in merged.items()
-             if isinstance(v, np.ndarray)}
+    m_dev = {k: jnp.asarray(v) if isinstance(v, np.ndarray) else v
+             for k, v in merged.items()}
     x_cat = jnp.concatenate(xs, axis=0)
 
     def premerged():
-        return spmm_block_slabs(m_dev["colidx"], m_dev["values"],
-                                m_dev["rowloc"], m_dev["out_row"],
-                                x_cat, n_out)
+        return spmm_auto(m_dev, x_cat, n_out)
 
     us_ind = time_call(individual, warmup=1, iters=3)
     us_bat = time_call(batched, warmup=1, iters=3)

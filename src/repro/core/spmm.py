@@ -4,7 +4,12 @@
 block-level partition -> slab packing) and exposes ``__call__(x)`` computing
 ``A @ x`` in the ORIGINAL row order, with selectable backends:
 
-  backend="pallas"   Pallas TPU kernel (interpret mode on CPU)
+  backend="auto"     VMEM-routed Pallas dispatch: resident / windowed / hbm
+                     picked per call from the feature-operand shape
+  backend="pallas"   resident-X Pallas kernel (raises VmemBudgetError when
+                     the feature tile exceeds the VMEM budget)
+  backend="windowed" row-window streaming Pallas kernel (middle regime)
+  backend="hbm"      HBM-gather Pallas kernel (N-unbounded fallback)
   backend="blocked"  jnp twin of the kernel (portable production path)
   backend="segment"  COO + segment_sum (cuSPARSE-analogue baseline)
   backend="warp"     warp-level fixed-NZ-group emulation (GNNAdvisor analogue)
@@ -29,7 +34,8 @@ from .plan_cache import (
 )
 from ..kernels import ops as kops
 
-Backend = Literal["pallas", "blocked", "segment", "warp", "dense"]
+Backend = Literal["auto", "pallas", "windowed", "hbm",
+                  "blocked", "segment", "warp", "dense"]
 
 
 @dataclasses.dataclass
@@ -54,8 +60,17 @@ class AccelSpMM:
 
     def __call__(self, x: jax.Array, backend: Optional[Backend] = None) -> jax.Array:
         be = backend or self.backend
+        if be == "auto":
+            out_sorted = kops.spmm_auto(self.slabs, x, self.n_rows)
+            return out_sorted[self.inv_perm]
         if be == "pallas":
             out_sorted = kops.spmm_pallas(self.slabs, x, self.n_rows)
+            return out_sorted[self.inv_perm]
+        if be == "windowed":
+            out_sorted = kops.spmm_pallas_windowed(self.slabs, x, self.n_rows)
+            return out_sorted[self.inv_perm]
+        if be == "hbm":
+            out_sorted = kops.spmm_pallas_hbm(self.slabs, x, self.n_rows)
             return out_sorted[self.inv_perm]
         if be == "blocked":
             out_sorted = kops.spmm_blocked(

@@ -13,26 +13,39 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .spmm_accel import spmm_block_slabs
+from .router import route_spmm
+from .spmm_accel import spmm_block_slabs, spmm_block_slabs_windowed
 from .spmm_hbm import spmm_block_slabs_hbm
 from .grouped_matmul import grouped_matmul
 
-__all__ = ["spmm_pallas", "spmm_pallas_hbm", "spmm_blocked", "spmm_batched",
+__all__ = ["spmm_pallas", "spmm_pallas_windowed", "spmm_pallas_hbm",
+           "spmm_auto", "spmm_blocked", "spmm_batched",
            "grouped_matmul_pallas", "grouped_matmul_blocked"]
 
 
 def spmm_batched(slab_list, x_list, n_rows_list, *, backend="pallas",
-                 interpret=True, pad_blocks_to=None):
+                 interpret=True, pad_blocks_to=None, return_decision=False):
     """Fused multi-graph SpMM (one pallas_call for the whole batch)."""
     from .spmm_batched import spmm_batched as _batched
     return _batched(slab_list, x_list, n_rows_list, backend=backend,
-                    interpret=interpret, pad_blocks_to=pad_blocks_to)
+                    interpret=interpret, pad_blocks_to=pad_blocks_to,
+                    return_decision=return_decision)
 
 
 def spmm_pallas(slabs, x, n_rows, *, interpret=True):
+    """Resident-X kernel; raises VmemBudgetError past N_pad <= 4096 (f32)."""
     return spmm_block_slabs(
         slabs["colidx"], slabs["values"], slabs["rowloc"], slabs["out_row"],
         x, n_rows, interpret=interpret,
+    )
+
+
+def spmm_pallas_windowed(slabs, x, n_rows, *, interpret=True,
+                         window_rows=None):
+    """Row-window streaming variant: X visits VMEM one window at a time."""
+    return spmm_block_slabs_windowed(
+        slabs["colidx"], slabs["values"], slabs["rowloc"], slabs["out_row"],
+        x, n_rows, interpret=interpret, window_rows=window_rows,
     )
 
 
@@ -43,6 +56,19 @@ def spmm_pallas_hbm(slabs, x, n_rows, *, interpret=True):
         slabs["colidx"], slabs["values"], slabs["rowloc"], slabs["out_row"],
         x, n_rows, interpret=interpret,
     )
+
+
+def spmm_auto(slabs, x, n_rows, *, interpret=True, return_decision=False):
+    """VMEM-routed single-graph dispatch: resident / windowed / hbm chosen
+    from the feature-operand shape (see ``router.route_spmm``)."""
+    decision = route_spmm(
+        int(x.shape[0]), int(x.shape[1]),
+        int(slabs["C"]), int(slabs["R"]),
+        itemsize=jnp.dtype(x.dtype).itemsize)
+    fn = {"resident": spmm_pallas, "windowed": spmm_pallas_windowed,
+          "hbm": spmm_pallas_hbm}[decision.backend]
+    out = fn(slabs, x, n_rows, interpret=interpret)
+    return (out, decision) if return_decision else out
 
 
 @functools.partial(jax.jit, static_argnames=("n_rows", "block_chunk"))

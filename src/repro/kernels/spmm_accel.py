@@ -15,14 +15,27 @@ TPU mapping of the paper's design (DESIGN.md §2):
   epilogue over the packed block outputs (TPU grids are sequential, so a
   revisit-accumulate output alias is also legal; see ops.py notes).
 
-VMEM budget per grid step (f32, defaults C=256, R=64, F_tile=128):
-  x slab        [C, F_tile]   128 KiB   (gather staging, scratch)
-  out slab      [R, F_tile]    32 KiB
-  colidx/values/rowloc [C]      3 KiB
-  one-hot       [C, R]         64 KiB
-  X feature tile [N_pad, F_tile] — resident path; for N_pad <= 4096 this is
-  <= 2 MiB and fits comfortably; larger graphs use the row-window variant
-  (``num_windows > 1``) which streams X in row windows and accumulates.
+VMEM budget per grid step (f32, defaults C=256, R=64, F_tile=128; the
+routing arithmetic lives in ``router.py``):
+
+  term                          resident          windowed         (hbm: see
+  ----------------------------  ----------------  ---------------  spmm_hbm)
+  X feature tile                [N_pad, F_tile]   [4096, F_tile]
+                                N_pad<=4096: 2MiB  2 MiB x 2 bufs
+  gathered slab [C, F_tile]     128 KiB           128 KiB
+  out slab      [R, F_tile]     32 KiB (x2 bufs)  32 KiB (x2 bufs)
+  colidx/values/rowloc [C]      3 KiB  (x2 bufs)  3 KiB  (x2 bufs)
+  one-hot       [C, R]          64 KiB            64 KiB
+
+* ``spmm_block_slabs`` (resident): the whole X tile sits in VMEM. Guarded —
+  N_pad over the 2 MiB tile budget raises ``VmemBudgetError`` at trace time
+  (on hardware it would be a Mosaic compile failure, not a slowdown).
+* ``spmm_block_slabs_windowed``: X streams through VMEM in row windows of
+  ``window_rows`` (default 4096); a third grid axis sweeps the windows and
+  accumulates into the revisited output block (TPU grids are sequential, so
+  revisit accumulation is legal). Middle regime: N_pad <= 4 windows.
+* beyond that, ``spmm_hbm.spmm_block_slabs_hbm`` gathers rows straight from
+  HBM. ``router.route_spmm`` picks between the three automatically.
 """
 from __future__ import annotations
 
@@ -32,8 +45,29 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .router import (
+    assert_resident_fits,
+    pad_features,
+    pad_rows,
+    resident_window_rows,
+)
+
 
 DEFAULT_F_TILE = 128  # lane width — the "combined warp" quantum on TPU
+
+
+def scatter_block_rows(out_slabs: jax.Array, out_row: jax.Array,
+                       n_rows: int, n_features: int) -> jax.Array:
+    """Shared scatter epilogue of every slab kernel: packed [B, R, F_pad]
+    block rows -> global [n_rows, n_features]. Non-split blocks write
+    disjoint rows; split-row blocks accumulate; slot n_rows is the padding
+    sentinel and is dropped (sequential-grid revisit accumulation is the
+    real-TPU alternative; see DESIGN.md §2)."""
+    B, R, F_pad = out_slabs.shape
+    flat = out_slabs.reshape(B * R, F_pad)
+    seg = out_row.reshape(B * R)
+    out = jax.ops.segment_sum(flat, seg, num_segments=n_rows + 1)
+    return out[:n_rows, :n_features]
 
 
 def _spmm_kernel(colidx_ref, values_ref, rowloc_ref, x_ref, out_ref, *, C, R):
@@ -79,15 +113,23 @@ def spmm_block_slabs(
     f_tile: int = DEFAULT_F_TILE,
     interpret: bool = True,
 ) -> jax.Array:
-    """Run the Accel-GCN SpMM kernel over packed slabs; returns [n_rows, F]."""
+    """Run the Accel-GCN SpMM kernel over packed slabs; returns [n_rows, F].
+
+    Raises :class:`repro.kernels.router.VmemBudgetError` when the resident
+    X tile would not fit the VMEM budget (N_pad > 4096 at f32 defaults);
+    oversized graphs belong to ``spmm_block_slabs_windowed`` or the HBM
+    gather kernel — ``backend="auto"`` picks for you.
+    """
     B, C = colidx.shape
     R = out_row.shape[1]
     N, F = x.shape
+    assert_resident_fits(N, F, C, R, f_tile=f_tile,
+                         itemsize=jnp.dtype(x.dtype).itemsize)
 
     # Combined-warp alignment: pad F to the lane width (paper's pad-to-32,
     # scaled to TPU's 128 lanes), pad N to sublane multiple.
-    F_pad = max(f_tile, ((F + f_tile - 1) // f_tile) * f_tile)
-    N_pad = ((N + 7) // 8) * 8
+    F_pad = pad_features(F, f_tile)
+    N_pad = pad_rows(N)
     x_p = jnp.zeros((N_pad, F_pad), x.dtype).at[:N, :F].set(x)
     nf = F_pad // f_tile
 
@@ -106,10 +148,91 @@ def spmm_block_slabs(
         interpret=interpret,
     )(colidx, values, rowloc, x_p)
 
-    # Epilogue: scatter packed block rows to global rows. Non-split blocks
-    # write disjoint rows; split-row blocks accumulate here (sequential-grid
-    # revisit accumulation is the real-TPU alternative; see DESIGN.md §2).
-    flat = out_slabs.reshape(B * R, F_pad)
-    seg = out_row.reshape(B * R)
-    out = jax.ops.segment_sum(flat, seg, num_segments=n_rows + 1)
-    return out[:n_rows, :F]
+    return scatter_block_rows(out_slabs, out_row, n_rows, F)
+
+
+def _spmm_kernel_windowed(colidx_ref, values_ref, rowloc_ref, x_ref, out_ref,
+                          *, C, R, window):
+    """One block x one feature tile x one row window of X.
+
+    x_ref: [window, F_tile] — the w-th row window of the padded features.
+    Slots whose column falls outside the window contribute zero this sweep
+    and are picked up by the sweep that owns them; the revisited output
+    block accumulates across the (sequential) window axis.
+    """
+    w = pl.program_id(2)
+    cols = colidx_ref[0, :]                      # [C] global column indices
+    vals = values_ref[0, :].astype(jnp.float32)  # [C]
+    rloc = rowloc_ref[0, :]                      # [C]
+
+    local = cols - w * window
+    in_window = ((local >= 0) & (local < window)).astype(jnp.float32)
+    local = jnp.clip(local, 0, window - 1)       # keep the gather in bounds
+
+    gathered = x_ref[local, :].astype(jnp.float32)           # [C, F_tile]
+    gathered = gathered * (vals * in_window)[:, None]
+
+    onehot = (rloc[None, :] == jax.lax.broadcasted_iota(jnp.int32, (R, C), 0)
+              ).astype(jnp.float32)                          # [R, C]
+    contrib = jax.lax.dot_general(
+        onehot, gathered, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(w == 0)
+    def _init():
+        out_ref[0, :, :] = contrib
+
+    @pl.when(w > 0)
+    def _accumulate():
+        out_ref[0, :, :] += contrib
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rows", "interpret", "f_tile", "window_rows"),
+)
+def spmm_block_slabs_windowed(
+    colidx: jax.Array,   # int32[B, C]
+    values: jax.Array,   # f32[B, C]
+    rowloc: jax.Array,   # int32[B, C]
+    out_row: jax.Array,  # int32[B, R]
+    x: jax.Array,        # [N, F]
+    n_rows: int,
+    *,
+    f_tile: int = DEFAULT_F_TILE,
+    window_rows: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Row-window streaming variant: X visits VMEM one ``window_rows`` tile
+    at a time (grid axis 2), so any N fits in the resident budget at the
+    price of one full (B, nf) grid sweep per window. Returns [n_rows, F].
+    """
+    B, C = colidx.shape
+    R = out_row.shape[1]
+    N, F = x.shape
+    window = window_rows or resident_window_rows(
+        f_tile, jnp.dtype(x.dtype).itemsize)
+
+    F_pad = pad_features(F, f_tile)
+    num_windows = max(1, (N + window - 1) // window)
+    N_pad = num_windows * window
+    x_p = jnp.zeros((N_pad, F_pad), x.dtype).at[:N, :F].set(x)
+    nf = F_pad // f_tile
+
+    grid = (B, nf, num_windows)  # window axis innermost: consecutive
+    out_slabs = pl.pallas_call(  # revisits of one output block accumulate
+        functools.partial(_spmm_kernel_windowed, C=C, R=R, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C), lambda b, j, w: (b, 0)),
+            pl.BlockSpec((1, C), lambda b, j, w: (b, 0)),
+            pl.BlockSpec((1, C), lambda b, j, w: (b, 0)),
+            pl.BlockSpec((window, f_tile), lambda b, j, w: (w, j)),
+        ],
+        out_specs=pl.BlockSpec((1, R, f_tile), lambda b, j, w: (b, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, R, F_pad), jnp.float32),
+        interpret=interpret,
+    )(colidx, values, rowloc, x_p)
+
+    return scatter_block_rows(out_slabs, out_row, n_rows, F)

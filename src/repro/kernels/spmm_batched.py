@@ -9,9 +9,14 @@ already iterates block-by-block. So a batch of graphs fuses by construction:
    by its output-row offset (the per-graph drop sentinel ``n_rows_g`` is
    remapped to the single batch-wide sentinel ``N_out``), then concatenate
    along the block axis;
-3. run the stock single-graph kernel (`spmm_block_slabs`) once over the
-   merged ``[B_total, C]`` slabs and the row-concatenated features — one
-   compilation, one dispatch, one scatter epilogue;
+3. route the merged ``[B_total, C]`` slabs + row-concatenated features to a
+   single-graph kernel — ONE compilation, one dispatch, one scatter
+   epilogue. The concatenated feature matrix is where a batch of
+   individually-fine graphs silently overflows the resident kernel's VMEM
+   budget (N_pad multiplies by batch size!), so ``backend="auto"`` asks
+   ``router.route_spmm`` to pick resident / windowed / HBM-gather from the
+   merged shape, and ``backend="pallas"`` (forced resident) raises
+   ``VmemBudgetError`` instead of silently compiling an oversized tile;
 4. slice each graph's rows back out of the batched output.
 
 Padding slab slots carry value 0 and padding block rows scatter to the
@@ -29,13 +34,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .spmm_accel import spmm_block_slabs
+from .router import RoutingDecision, route_spmm
+from .spmm_accel import spmm_block_slabs, spmm_block_slabs_windowed
+from .spmm_hbm import spmm_block_slabs_hbm
 
 __all__ = ["batch_graph_slabs", "spmm_batched", "bucket_blocks"]
 
 
-def bucket_blocks(b_total: int, min_bucket: int = 256) -> int:
-    """Next power-of-two block bucket (>= min_bucket) for jit-cache reuse."""
+def bucket_blocks(b_total: int, min_bucket: int = 8) -> int:
+    """Next power-of-two block bucket (>= min_bucket) for jit-cache reuse.
+
+    Power-of-two tiers bound padding waste below 2x the live block count
+    (for ``b_total >= min_bucket``); the old fixed 256 floor padded a
+    3-block batch to 256 blocks — 85x dead grid steps. Raise ``min_bucket``
+    only to trade those dead steps for fewer compiled grid shapes.
+    """
     bucket = min_bucket
     while bucket < b_total:
         bucket *= 2
@@ -110,6 +123,13 @@ def batch_graph_slabs(
     return merged, out_offsets, col_offsets, n_out
 
 
+_PALLAS_KERNELS = {
+    "resident": spmm_block_slabs,
+    "windowed": spmm_block_slabs_windowed,
+    "hbm": spmm_block_slabs_hbm,
+}
+
+
 def spmm_batched(
     slab_list: Sequence[Dict],
     x_list: Sequence[jax.Array],
@@ -118,12 +138,20 @@ def spmm_batched(
     backend: str = "pallas",
     interpret: bool = True,
     pad_blocks_to: Optional[int] = None,
-) -> List[jax.Array]:
+    return_decision: bool = False,
+) -> List[jax.Array] | Tuple[List[jax.Array], Optional[RoutingDecision]]:
     """Fused SpMM over several graphs; returns one ``[n_rows_g, F_g]`` output
     per graph (degree-sorted row order, same as the single-graph kernel).
 
     Feature matrices may differ in width; they are right-padded to the batch
     max ``F`` (padding columns are sliced off on the way out).
+
+    Backends: ``auto`` routes the merged dispatch (resident / windowed /
+    hbm) by VMEM footprint; ``pallas`` forces the resident kernel and raises
+    ``VmemBudgetError`` when the concatenated features exceed its budget;
+    ``windowed`` / ``hbm`` force those variants; ``blocked`` is the portable
+    jnp twin. With ``return_decision=True`` the routing record (or ``None``
+    for ``blocked``) comes back alongside the outputs.
     """
     G = len(slab_list)
     assert G == len(x_list) == len(n_rows_list) and G > 0
@@ -140,8 +168,15 @@ def spmm_batched(
          else jnp.asarray(x, dtype=jnp.float32)
          for x, f in zip(x_list, f_list)], axis=0)
 
-    if backend == "pallas":
-        out = spmm_block_slabs(
+    decision: Optional[RoutingDecision] = None
+    n_x = int(x_cat.shape[0])  # sum of n_cols — the quantity that overflows
+    if backend in ("pallas", "windowed", "hbm", "auto"):
+        force = {"pallas": "resident",
+                 "windowed": "windowed", "hbm": "hbm"}.get(backend)
+        decision = route_spmm(n_x, F, int(merged["C"]),
+                              int(merged["R"]), force=force)
+        kernel = _PALLAS_KERNELS[decision.backend]
+        out = kernel(
             jnp.asarray(merged["colidx"]), jnp.asarray(merged["values"]),
             jnp.asarray(merged["rowloc"]), jnp.asarray(merged["out_row"]),
             x_cat, n_out, interpret=interpret)
@@ -152,8 +187,9 @@ def spmm_batched(
             jnp.asarray(merged["rowloc"]), jnp.asarray(merged["out_row"]),
             x_cat, n_out)
     else:
-        raise ValueError(f"batched spmm backend must be pallas|blocked, "
-                         f"got {backend!r}")
+        raise ValueError(f"batched spmm backend must be "
+                         f"auto|pallas|windowed|hbm|blocked, got {backend!r}")
 
-    return [out[int(out_off[i]):int(out_off[i + 1]), :f_list[i]]
+    outs = [out[int(out_off[i]):int(out_off[i + 1]), :f_list[i]]
             for i in range(G)]
+    return (outs, decision) if return_decision else outs

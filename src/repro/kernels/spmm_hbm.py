@@ -1,16 +1,30 @@
 """Accel-GCN SpMM — HBM-resident feature matrix variant.
 
 ``spmm_accel.py`` keeps the feature tile VMEM-resident, which bounds the
-graph at N_pad x 128 x 4B <= ~2 MiB per tile (fine for layer-wise GCN
+graph at N_pad x 128 x 4B <= 2 MiB per tile (fine for layer-wise GCN
 batches, not for web-scale graphs). This variant keeps X in HBM
 (``memory_space=ANY``) and gathers the C rows a block needs with explicit
 double-buffered DMA — the TPU embedding-gather pattern, driven by the same
-block-partition metadata.
+block-partition metadata. VMEM cost is independent of N, so this is the
+fallback regime of ``router.route_spmm`` (N_pad > MAX_WINDOWS x 4096 at
+defaults); cost scales with nnz instead.
 
-Per grid step (C=256 defaults, f32):
-  row slabs (2 buffers)  2 x [8, F_tile]   8 KiB   (8-row DMA granularity)
+Per grid step (C=256, R=64 defaults, f32):
+  row buffers (2 slots)  [2, 1, F_tile]    1 KiB   (one-ROW DMA granularity:
+                                           gathered rows are scattered, so an
+                                           8-row slab copy would move 8x the
+                                           bytes for one useful row unless
+                                           column indices happen to cluster)
   gathered slab          [C, F_tile]     128 KiB
-  out slab               [R, F_tile]      <=32 KiB
+  out slab               [R, F_tile]      32 KiB  (x2 pipeline buffers)
+  colidx/values/rowloc   3 x [C]           3 KiB  (x2 pipeline buffers)
+  one-hot                [C, R]            64 KiB
+
+Batched multi-graph slabs (``spmm_batched`` merge) run unchanged: column
+indices arrive pre-shifted into the concatenated feature rows, padded slab
+slots carry value 0 with an in-bounds index, and fully-padded bucket blocks
+(all values zero) skip their DMA loop entirely and write a zero output
+block — so block-count bucketing costs bandwidth only for live blocks.
 
 Validated in interpret mode against the same oracle as the resident-X
 kernel; on hardware the DMA issue loop overlaps the one-hot MXU matmul of
@@ -25,57 +39,76 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .router import pad_features, pad_rows
+from .spmm_accel import scatter_block_rows
+
 DEFAULT_F_TILE = 128
 
 
 def _kernel(colidx_ref, values_ref, rowloc_ref, x_hbm, out_ref,
             gathered, row_buf, sem, *, C, R):
-    """colidx/values/rowloc: [1, C] VMEM; x_hbm: [N_pad, F_tile] ANY;
+    """colidx/values/rowloc: [1, C] VMEM; x_hbm: [N_pad, F_pad] ANY (the
+    UNTILED padded features — ANY refs see the whole array, so each DMA
+    slices its own [1, F_tile] lane window at grid axis 1);
     out_ref: [1, R, F_tile]; gathered: [C, F_tile] VMEM scratch;
     row_buf: [2, 1, F_tile] VMEM scratch; sem: DMA semaphores [2]."""
+    j = pl.program_id(1)                 # which feature tile this step owns
+    f_tile = row_buf.shape[-1]
     cols = colidx_ref[0, :]
     vals = values_ref[0, :].astype(jnp.float32)
     rloc = rowloc_ref[0, :]
 
-    def issue(slot, k):
-        cp = pltpu.make_async_copy(
-            x_hbm.at[pl.ds(cols[k], 1), :],
-            row_buf.at[slot],
-            sem.at[slot],
-        )
-        cp.start()
+    # Bucket-padding blocks carry all-zero values: skip their C-row DMA loop
+    # (and never read the uninitialized gather scratch) — a padded dispatch
+    # pays grid-step overhead for dead blocks, not HBM bandwidth.
+    live = jnp.any(vals != 0.0)
 
-    def wait(slot, k):
-        cp = pltpu.make_async_copy(
-            x_hbm.at[pl.ds(cols[k], 1), :],
-            row_buf.at[slot],
-            sem.at[slot],
-        )
-        cp.wait()
+    @pl.when(live)
+    def _gather_and_reduce():
+        def issue(slot, k):
+            cp = pltpu.make_async_copy(
+                x_hbm.at[pl.ds(cols[k], 1), pl.ds(j * f_tile, f_tile)],
+                row_buf.at[slot],
+                sem.at[slot],
+            )
+            cp.start()
 
-    # double-buffered gather: issue k+1 while storing k
-    issue(0, 0)
+        def wait(slot, k):
+            cp = pltpu.make_async_copy(
+                x_hbm.at[pl.ds(cols[k], 1), pl.ds(j * f_tile, f_tile)],
+                row_buf.at[slot],
+                sem.at[slot],
+            )
+            cp.wait()
 
-    def body(k, _):
-        slot = jax.lax.rem(k, 2)
-        nxt = jax.lax.rem(k + 1, 2)
+        # double-buffered gather: issue k+1 while storing k
+        issue(0, 0)
 
-        @pl.when(k + 1 < C)
-        def _pre():
-            issue(nxt, k + 1)
+        def body(k, _):
+            slot = jax.lax.rem(k, 2)
+            nxt = jax.lax.rem(k + 1, 2)
 
-        wait(slot, k)
-        gathered[pl.ds(k, 1), :] = row_buf[slot].astype(jnp.float32)
-        return ()
+            @pl.when(k + 1 < C)
+            def _pre():
+                issue(nxt, k + 1)
 
-    jax.lax.fori_loop(0, C, body, ())
+            wait(slot, k)
+            gathered[pl.ds(k, 1), :] = row_buf[slot].astype(jnp.float32)
+            return ()
 
-    g = gathered[...] * vals[:, None]
-    onehot = (rloc[None, :] == jax.lax.broadcasted_iota(jnp.int32, (R, C), 0)
-              ).astype(jnp.float32)
-    out_ref[0, :, :] = jax.lax.dot_general(
-        onehot, g, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        jax.lax.fori_loop(0, C, body, ())
+
+        g = gathered[...] * vals[:, None]
+        onehot = (rloc[None, :] ==
+                  jax.lax.broadcasted_iota(jnp.int32, (R, C), 0)
+                  ).astype(jnp.float32)
+        out_ref[0, :, :] = jax.lax.dot_general(
+            onehot, g, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_not(live))
+    def _dead_block():
+        out_ref[0, :, :] = jnp.zeros_like(out_ref[0, :, :])
 
 
 @functools.partial(jax.jit, static_argnames=("n_rows", "interpret", "f_tile"))
@@ -85,8 +118,8 @@ def spmm_block_slabs_hbm(colidx, values, rowloc, out_row, x, n_rows,
     B, C = colidx.shape
     R = out_row.shape[1]
     N, F = x.shape
-    F_pad = max(f_tile, ((F + f_tile - 1) // f_tile) * f_tile)
-    N_pad = ((N + 7) // 8) * 8
+    F_pad = pad_features(F, f_tile)
+    N_pad = pad_rows(N)
     x_p = jnp.zeros((N_pad, F_pad), x.dtype).at[:N, :F].set(x)
     nf = F_pad // f_tile
 
@@ -109,7 +142,4 @@ def spmm_block_slabs_hbm(colidx, values, rowloc, out_row, x, n_rows,
         interpret=interpret,
     )(colidx, values, rowloc, x_p)
 
-    flat = out_slabs.reshape(B * R, F_pad)
-    seg = out_row.reshape(B * R)
-    out = jax.ops.segment_sum(flat, seg, num_segments=n_rows + 1)
-    return out[:n_rows, :F]
+    return scatter_block_rows(out_slabs, out_row, n_rows, F)

@@ -11,15 +11,24 @@ and carry a feature matrix; the engine
 3. packs up to ``max_graphs_per_batch`` distinct graphs into ONE fused
    kernel dispatch (`repro.kernels.spmm_batched`), with block-count
    bucketing so repeated batches reuse a single compiled kernel;
-4. un-permutes each graph's rows back to original order and splits feature
+4. routes each fused dispatch by VMEM footprint (``backend="auto"``):
+   the concatenated feature rows of a batch can overflow the resident
+   kernel's budget even when every member graph fits, so oversized batches
+   fall back to the row-windowed or HBM-gather kernel instead of silently
+   blowing the budget — per-dispatch choices are logged and counted in
+   ``stats()`` (``routed_resident`` / ``routed_windowed`` / ``routed_hbm``);
+5. un-permutes each graph's rows back to original order and splits feature
    columns back per request.
 
 Throughput/latency counters accumulate across ``serve`` calls; ``stats()``
-merges them with the plan cache's hit/miss/build/eviction counters.
+merges them with the plan cache's hit/miss/build/eviction counters. Each
+request records its enqueue->answer wall time (queue wait included);
+per-dispatch kernel time accumulates separately in ``total_serve_s``.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -30,9 +39,14 @@ from ..core.graph import CSRGraph, gcn_normalize
 from ..core.plan_cache import (
     PartitionConfig, PartitionPlan, PlanCache, build_partition_plan,
 )
+from ..kernels.router import RoutingDecision
 from ..kernels.spmm_batched import bucket_blocks, spmm_batched
 
 __all__ = ["GraphRequest", "GraphServeEngine"]
+
+logger = logging.getLogger(__name__)
+
+_BACKENDS = ("auto", "pallas", "windowed", "hbm", "blocked")
 
 
 @dataclasses.dataclass
@@ -42,7 +56,9 @@ class GraphRequest:
     graph_id: str
     x: jax.Array                       # [n_cols(graph), F]
     out: Optional[jax.Array] = None    # filled by serve()
-    latency_s: Optional[float] = None  # wall time of the dispatch that served it
+    latency_s: Optional[float] = None  # enqueue -> answer wall time (includes
+    #                                    queue wait behind earlier dispatches
+    #                                    of the same serve() call)
 
 
 class GraphServeEngine:
@@ -57,15 +73,18 @@ class GraphServeEngine:
         backend: str = "blocked",
         interpret: bool = True,
         max_graphs_per_batch: int = 8,
-        block_bucket: Optional[int] = 256,
+        block_bucket: Optional[int] = 8,
     ):
         self.config = config or PartitionConfig()
         self.cache = cache if cache is not None else PlanCache(cache_capacity)
-        if backend not in ("pallas", "blocked"):
-            raise ValueError("backend must be pallas|blocked")
+        if backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {'|'.join(_BACKENDS)}")
         self.backend = backend
         self.interpret = interpret
         self.max_graphs_per_batch = max_graphs_per_batch
+        # min bucket tier: power-of-two tiers from here cap padding waste
+        # below 2x the live blocks (the old fixed-256 floor padded a 3-block
+        # batch to 256 — 85x dead grid steps).
         self.block_bucket = block_bucket
         self._graphs: Dict[str, CSRGraph] = {}
         self._keys: Dict[str, tuple] = {}  # graph_id -> plan key (hashed once)
@@ -74,7 +93,13 @@ class GraphServeEngine:
         self.batches_dispatched = 0
         self.rows_served = 0
         self.values_served = 0       # rows * feature columns
-        self.total_serve_s = 0.0
+        self.total_serve_s = 0.0     # sum of per-DISPATCH kernel wall times
+        self.total_request_latency_s = 0.0  # sum of enqueue->answer times
+        self.live_blocks = 0         # merged blocks carrying real slabs
+        self.padded_blocks = 0       # blocks actually dispatched (bucketed)
+        self.backend_dispatches: Dict[str, int] = {
+            "resident": 0, "windowed": 0, "hbm": 0, "blocked": 0}
+        self.last_decision: Optional[RoutingDecision] = None
 
     # ------------------------------------------------------------------ admin
     def register_graph(self, graph_id: str, g: CSRGraph,
@@ -110,6 +135,7 @@ class GraphServeEngine:
 
     def serve(self, requests: Sequence[GraphRequest]) -> List[GraphRequest]:
         """Answer a list of requests, batching as aggressively as possible."""
+        t_enqueue = time.perf_counter()   # latency clock for EVERY request
         # Group same-graph requests: their features fuse along the F axis so
         # the slab gather runs once for all of them.
         order: List[str] = []
@@ -136,10 +162,11 @@ class GraphServeEngine:
 
         for start in range(0, len(order), self.max_graphs_per_batch):
             self._dispatch([(gid, groups[gid], plans[gid])
-                            for gid in order[start:start + self.max_graphs_per_batch]])
+                            for gid in order[start:start + self.max_graphs_per_batch]],
+                           t_enqueue)
         return list(requests)
 
-    def _dispatch(self, batch) -> None:
+    def _dispatch(self, batch, t_enqueue: float) -> None:
         """One fused kernel call over up to max_graphs_per_batch graphs."""
         t0 = time.perf_counter()
         plans: List[PartitionPlan] = []
@@ -152,27 +179,41 @@ class GraphServeEngine:
                       else jnp.concatenate(feats, axis=1))
             col_splits.append([int(f.shape[1]) for f in feats])
 
+        b_total = sum(p.num_blocks for p in plans)
         pad_to = None
         if self.block_bucket:
-            b_total = sum(p.num_blocks for p in plans)
             pad_to = bucket_blocks(b_total, self.block_bucket)
-        outs = spmm_batched([p.slabs for p in plans], xs,
-                            [p.n_rows for p in plans],
-                            backend=self.backend, interpret=self.interpret,
-                            pad_blocks_to=pad_to)
+        outs, decision = spmm_batched(
+            [p.slabs for p in plans], xs, [p.n_rows for p in plans],
+            backend=self.backend, interpret=self.interpret,
+            pad_blocks_to=pad_to, return_decision=True)
         jax.block_until_ready(outs)
-        dt = time.perf_counter() - t0
+        t_done = time.perf_counter()
+        dt = t_done - t0                       # this dispatch's kernel time
+        latency = t_done - t_enqueue           # enqueue -> answer, incl. queue
+
+        executed = decision.backend if decision is not None else "blocked"
+        self.backend_dispatches[executed] += 1
+        self.last_decision = decision
+        self.live_blocks += b_total
+        self.padded_blocks += pad_to if pad_to else b_total
+        if logger.isEnabledFor(logging.DEBUG):
+            logger.debug(
+                "dispatch: graphs=%d blocks=%d->%d backend=%s (%s) %.1fms",
+                len(batch), b_total, pad_to or b_total, executed,
+                decision.reason if decision else "jnp twin", dt * 1e3)
 
         for (gid, reqs, plan), out, widths in zip(batch, outs, col_splits):
             out = out[plan.inv_perm]          # back to original row order
             col = 0
             for r, w in zip(reqs, widths):
                 r.out = out[:, col:col + w]
-                r.latency_s = dt
+                r.latency_s = latency
                 col += w
                 self.requests_served += 1
                 self.rows_served += plan.n_rows
                 self.values_served += plan.n_rows * w
+                self.total_request_latency_s += latency
         self.batches_dispatched += 1
         self.total_serve_s += dt
 
@@ -190,5 +231,21 @@ class GraphServeEngine:
                                 if self.batches_dispatched else 0.0),
             rows_per_s=(self.rows_served / self.total_serve_s
                         if self.total_serve_s else 0.0),
+            # routing: which kernel regime each fused dispatch executed on
+            routed_resident=self.backend_dispatches["resident"],
+            routed_windowed=self.backend_dispatches["windowed"],
+            routed_hbm=self.backend_dispatches["hbm"],
+            routed_blocked=self.backend_dispatches["blocked"],
+            # block bucketing waste: padded/live == 1.0 means no dead steps
+            live_blocks=self.live_blocks,
+            padded_blocks=self.padded_blocks,
+            block_pad_ratio=(self.padded_blocks / self.live_blocks
+                             if self.live_blocks else 0.0),
+            # latency: per-dispatch kernel time vs per-request wait
+            avg_dispatch_s=(self.total_serve_s / self.batches_dispatched
+                            if self.batches_dispatched else 0.0),
+            avg_request_latency_s=(
+                self.total_request_latency_s / self.requests_served
+                if self.requests_served else 0.0),
         )
         return s

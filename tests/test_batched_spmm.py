@@ -9,7 +9,7 @@ from repro.kernels.ref import csr_spmm_ref
 from repro.kernels.spmm_accel import spmm_block_slabs
 from repro.kernels.spmm_batched import batch_graph_slabs, bucket_blocks, spmm_batched
 
-from conftest import make_powerlaw_csr
+from conftest import make_powerlaw_csr, make_wide_csr
 
 
 def _plan_x(g, cfg, F, seed):
@@ -32,6 +32,7 @@ def _check_parity(plans, xs, backend, **kw):
                                    atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("backend", ["pallas", "blocked"])
 def test_batched_matches_individual(backend):
     cfg = PartitionConfig()
@@ -51,6 +52,7 @@ def test_batched_single_graph_degenerate():
     _check_parity([p], [x], "blocked")
 
 
+@pytest.mark.slow
 def test_batched_mixed_partition_configs():
     """Graphs partitioned under different configs (different C, R) pad to a
     common capacity and still agree with their own single-graph runs."""
@@ -86,6 +88,7 @@ def test_batched_zero_degree_rows():
     np.testing.assert_array_equal(np.asarray(outs[0][:4]), 0.0)
 
 
+@pytest.mark.slow
 def test_batched_split_rows_degree_exceeds_capacity():
     """Rows with degree > C split across blocks; cross-block accumulation in
     the fused epilogue must not leak between graphs."""
@@ -109,6 +112,7 @@ def test_batched_split_rows_degree_exceeds_capacity():
                                    atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("min_bucket", [64, 256])
 def test_block_bucketing_parity(min_bucket):
     cfg = PartitionConfig()
@@ -122,6 +126,87 @@ def test_block_bucketing_parity(min_bucket):
     bucket = bucket_blocks(b_total, min_bucket)
     assert bucket >= b_total and bucket >= min_bucket
     _check_parity(plans, xs, "blocked", pad_blocks_to=bucket)
+
+
+def test_bucket_blocks_tiers_bound_padding_waste():
+    """Power-of-two tiers from 8: a tiny batch no longer pads to 256
+    blocks, and waste stays below 2x for any batch at least one tier big."""
+    assert bucket_blocks(3) == 8
+    assert bucket_blocks(8) == 8
+    assert bucket_blocks(9) == 16
+    assert bucket_blocks(100) == 128
+    for b in range(8, 2000, 37):
+        bucket = bucket_blocks(b)
+        assert b <= bucket < 2 * b
+    # explicit floors (jit-reuse tuning) still respected
+    assert bucket_blocks(3, min_bucket=256) == 256
+    assert bucket_blocks(300, min_bucket=64) == 512
+
+
+@pytest.mark.slow
+def test_batched_auto_routes_oversized_mix_to_hbm():
+    """One n_cols=20k graph in an otherwise-small batch: auto must pick the
+    HBM-gather kernel and still match the per-graph blocked oracle."""
+    from repro.kernels.ops import spmm_blocked
+
+    cfg = PartitionConfig()
+    graphs = [make_wide_csr(500, 20_000, 1_500, seed=1),
+              gcn_normalize(make_powerlaw_csr(n=90, seed=2)),
+              gcn_normalize(make_powerlaw_csr(n=130, seed=3))]
+    plans = [build_partition_plan(g, cfg) for g in graphs]
+    rng = np.random.default_rng(0)
+    xs = [jnp.asarray(rng.normal(size=(g.n_cols, 8)), jnp.float32)
+          for g in graphs]
+
+    outs, decision = spmm_batched(
+        [p.slabs for p in plans], xs, [p.n_rows for p in plans],
+        backend="auto", return_decision=True)
+    assert decision.backend == "hbm"
+    assert decision.n_rows == sum(g.n_cols for g in graphs)
+    for p, x, out in zip(plans, xs, outs):
+        ref = spmm_blocked(p.slabs["colidx"], p.slabs["values"],
+                           p.slabs["rowloc"], p.slabs["out_row"],
+                           x, p.n_rows)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_batched_forced_resident_raises_on_oversized_mix():
+    from repro.kernels.router import VmemBudgetError
+
+    cfg = PartitionConfig()
+    graphs = [make_wide_csr(500, 20_000, 1_500, seed=1),
+              gcn_normalize(make_powerlaw_csr(n=90, seed=2))]
+    plans = [build_partition_plan(g, cfg) for g in graphs]
+    xs = [jnp.zeros((g.n_cols, 8), jnp.float32) for g in graphs]
+    with pytest.raises(VmemBudgetError, match="VMEM budget"):
+        spmm_batched([p.slabs for p in plans], xs,
+                     [p.n_rows for p in plans], backend="pallas")
+
+
+@pytest.mark.slow
+def test_batched_auto_windowed_middle_regime():
+    """A batch of individually-resident graphs whose concatenation lands in
+    the windowed regime (4096 < N_pad <= 16384)."""
+    cfg = PartitionConfig()
+    graphs = [make_wide_csr(400, 2_500, 1_200, seed=10 + i)
+              for i in range(3)]
+    plans = [build_partition_plan(g, cfg) for g in graphs]
+    rng = np.random.default_rng(4)
+    xs = [jnp.asarray(rng.normal(size=(g.n_cols, 16)), jnp.float32)
+          for g in graphs]
+
+    outs, decision = spmm_batched(
+        [p.slabs for p in plans], xs, [p.n_rows for p in plans],
+        backend="auto", return_decision=True)
+    assert decision.backend == "windowed" and decision.num_windows == 2
+    _check_parity(plans, xs, "blocked")   # blocked twin agrees per graph
+    for p, x, out in zip(plans, xs, outs):
+        ref = spmm_block_slabs(p.slabs["colidx"], p.slabs["values"],
+                               p.slabs["rowloc"], p.slabs["out_row"],
+                               x, p.n_rows)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
 
 
 def test_batch_graph_slabs_sentinel_remap():

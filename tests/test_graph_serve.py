@@ -8,7 +8,7 @@ from repro.core.plan_cache import PartitionConfig, PlanCache
 from repro.core.spmm import make_accel_spmm
 from repro.serve.graph_engine import GraphRequest, GraphServeEngine
 
-from conftest import make_powerlaw_csr
+from conftest import make_powerlaw_csr, make_wide_csr
 
 
 def _setup(n_graphs=3, backend="blocked", **ekw):
@@ -25,7 +25,8 @@ def _setup(n_graphs=3, backend="blocked", **ekw):
     return engine, graphs, feats
 
 
-@pytest.mark.parametrize("backend", ["blocked", "pallas"])
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["blocked", "pallas", "auto"])
 def test_serve_matches_direct_operator(backend):
     engine, graphs, feats = _setup(backend=backend)
     reqs = [GraphRequest(gid, feats[gid]) for gid in graphs]
@@ -70,6 +71,7 @@ def test_same_graph_requests_fuse_along_features():
                                atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_batch_splitting_respects_max_graphs():
     engine, graphs, feats = _setup(n_graphs=5, max_graphs_per_batch=2)
     reqs = [GraphRequest(gid, feats[gid]) for gid in graphs]
@@ -154,3 +156,98 @@ def test_serve_one_convenience():
     direct = make_accel_spmm(graphs["g0"])(feats["g0"])
     np.testing.assert_allclose(np.asarray(out), np.asarray(direct),
                                atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------- routing + latency
+def _large_mix_engine(backend):
+    engine = GraphServeEngine(backend=backend)
+    graphs = {"big": make_wide_csr(500, 20_000, 1_500, seed=1)}
+    for i in range(3):
+        graphs[f"s{i}"] = gcn_normalize(make_powerlaw_csr(n=80 + 20 * i,
+                                                          seed=2 + i))
+    for gid, g in graphs.items():
+        engine.register_graph(gid, g)
+    rng = np.random.default_rng(0)
+    reqs = [GraphRequest(gid, jnp.asarray(
+        rng.normal(size=(g.n_cols, 8)), jnp.float32))
+        for gid, g in graphs.items()]
+    return engine, graphs, reqs
+
+
+@pytest.mark.slow
+def test_engine_routes_oversized_batch_to_hbm():
+    """Acceptance: a batch mixing one n_cols=20k graph with small graphs
+    dispatches through the engine, routes to the HBM-gather backend, and
+    matches the per-graph blocked oracle to <= 1e-5."""
+    engine, graphs, reqs = _large_mix_engine("auto")
+    engine.serve(reqs)
+    st = engine.stats()
+    assert st["routed_hbm"] == 1, "oversized batch must take the HBM path"
+    assert st["routed_resident"] == st["routed_windowed"] == 0
+    assert engine.last_decision.backend == "hbm"
+    d = engine.last_decision
+    assert d.vmem_bytes <= d.total_budget_bytes, \
+        "dispatch exceeds the per-call VMEM estimate budget"
+    for r in reqs:
+        oracle = make_accel_spmm(graphs[r.graph_id], backend="blocked")(r.x)
+        np.testing.assert_allclose(np.asarray(r.out), np.asarray(oracle),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_engine_forced_resident_raises_budget_error():
+    """Acceptance: backend='pallas' on the same oversized batch raises the
+    budget error instead of silently compiling, serving nothing."""
+    from repro.kernels.router import VmemBudgetError
+    engine, _, reqs = _large_mix_engine("pallas")
+    with pytest.raises(VmemBudgetError, match="VMEM budget"):
+        engine.serve(reqs)
+    assert engine.batches_dispatched == 0
+    assert all(r.out is None for r in reqs)
+
+
+def test_engine_small_batches_route_resident():
+    engine, graphs, feats = _setup(n_graphs=3, backend="auto")
+    engine.serve([GraphRequest(gid, feats[gid]) for gid in graphs])
+    st = engine.stats()
+    assert st["routed_resident"] == 1
+    assert st["routed_hbm"] == st["routed_windowed"] == 0
+
+
+def test_blocked_backend_counts_as_blocked_dispatch():
+    engine, graphs, feats = _setup(n_graphs=1, backend="blocked")
+    engine.serve([GraphRequest("g0", feats["g0"])])
+    assert engine.stats()["routed_blocked"] == 1
+
+
+def test_per_request_latency_includes_queue_wait():
+    """Requests answered by later dispatches of one serve() call must report
+    strictly larger enqueue->answer latency than the first dispatch; the
+    per-dispatch kernel time accumulates separately."""
+    engine, graphs, feats = _setup(n_graphs=3, max_graphs_per_batch=1)
+    reqs = [GraphRequest(gid, feats[gid]) for gid in graphs]
+    engine.serve(reqs)
+    assert engine.batches_dispatched == 3
+    lat = [r.latency_s for r in reqs]
+    assert all(l is not None and l > 0 for l in lat)
+    assert lat[0] < lat[1] < lat[2], "later dispatches waited in queue"
+    st = engine.stats()
+    # queue wait means summed request latency exceeds summed kernel time
+    assert engine.total_request_latency_s > st["total_serve_s"]
+    assert st["avg_dispatch_s"] > 0
+    assert st["avg_request_latency_s"] >= st["avg_dispatch_s"]
+
+
+def test_block_padding_counters_visible():
+    engine, graphs, feats = _setup(n_graphs=2)  # default bucket tiers from 8
+    engine.serve([GraphRequest(gid, feats[gid]) for gid in graphs])
+    st = engine.stats()
+    assert st["live_blocks"] > 0
+    assert st["padded_blocks"] >= st["live_blocks"]
+    # power-of-two tiers bound waste by 2x (plus the min-tier floor of 8)
+    assert st["padded_blocks"] < 2 * max(st["live_blocks"], 8)
+    assert st["block_pad_ratio"] == st["padded_blocks"] / st["live_blocks"]
+
+
+def test_bad_backend_rejected():
+    with pytest.raises(ValueError, match="backend must be"):
+        GraphServeEngine(backend="segment")

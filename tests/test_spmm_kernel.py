@@ -70,7 +70,7 @@ def test_hypothesis_random_graphs(n, seed, zipf, F):
     np.testing.assert_allclose(out, ref, atol=5e-4, rtol=1e-3)
 
 
-@pytest.mark.parametrize("F", [32, 96, 128])
+@pytest.mark.parametrize("F", [32, 96, 128, 200])
 def test_hbm_gather_variant(F):
     """HBM-resident X kernel (double-buffered DMA gather) vs oracle."""
     from repro.kernels.spmm_hbm import spmm_block_slabs_hbm
