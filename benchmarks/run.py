@@ -5,9 +5,13 @@ Emits ``name,us_per_call,derived`` CSV. Sections:
   fig6      runtime vs RHS column dimension (16..128 + odd widths)
   table2    block-vs-warp partition + combined-warp ablations
   preproc   O(n) preprocessing scaling (paper §III-C)
-  serve     plan-cache amortization + batched multi-graph dispatch
+  serve     plan-cache amortization + batched multi-graph dispatch, plus
+            the concurrent-submitter section (N threads of open-loop
+            traffic: continuous-batching scheduler vs per-call dispatch;
+            stats also land in benchmarks/results/serve_stats.json)
   routing   resident vs windowed vs HBM-gather vs auto at the VMEM
-            boundaries (mixes that straddle the routing thresholds)
+            boundaries (mixes that straddle the routing thresholds), and
+            the resident kernel's block_major vs ft_major grid orders
   moe       beyond-paper: block dispatch for MoE
   roofline  summary rows from the dry-run results (if present)
 """

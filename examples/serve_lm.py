@@ -1,6 +1,11 @@
-"""Serve a small LM with batched requests through the decode engine.
+"""Serve a small LM through the continuous-batching decode engine.
 
     PYTHONPATH=src python examples/serve_lm.py --arch phi3-mini-3.8b
+
+Two phases: the classic synchronous ``generate()`` (kept as a thin wrapper
+over the scheduler), then asynchronous ``submit() -> Future`` traffic where
+more requests than decode slots are in flight — finished slots are refilled
+mid-round (slot-reuse admission) instead of waiting for the whole batch.
 """
 import argparse
 import time
@@ -24,6 +29,7 @@ def main():
     params = lm.init_lm(cfg, jax.random.PRNGKey(0))
     engine = ServeEngine(cfg, params, batch=args.batch, max_seq=128, eos_id=-1)
 
+    # synchronous wrapper (backward-compatible API)
     reqs = [Request(prompt=[1 + i, 7, 42], max_new=args.max_new - i * 2)
             for i in range(args.batch - 1)]
     t0 = time.perf_counter()
@@ -34,6 +40,23 @@ def main():
         print(f"  req{i}: prompt={r.prompt} -> {r.out}")
     print(f"[serve] {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s batched greedy decode)")
+
+    # async: 2x more requests than slots; early finishers free slots that
+    # are refilled mid-round from the admission queue
+    n_async = args.batch * 2
+    t0 = time.perf_counter()
+    futs = [engine.submit([3 + i, 11, 5], max_new=4 + 3 * (i % 3))
+            for i in range(n_async)]
+    outs = [f.result() for f in futs]
+    dt = time.perf_counter() - t0
+    total = sum(len(o) for o in outs)
+    st = engine.stats()
+    print(f"[serve] async: {n_async} requests through {args.batch} slots in "
+          f"{dt:.2f}s ({total/dt:.1f} tok/s)")
+    print(f"[serve] rounds={st['rounds']} slots_reused={st['slots_reused']} "
+          f"slot_utilization={st['slot_utilization']:.2f} "
+          f"p99 latency={st['sched_p99_latency_s'] * 1e3:.0f}ms")
+    engine.close()
 
 
 if __name__ == "__main__":

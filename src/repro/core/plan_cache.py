@@ -22,8 +22,10 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
+import threading
 from collections import OrderedDict
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -146,30 +148,60 @@ def build_partition_plan(g: CSRGraph, cfg: PartitionConfig,
     )
 
 
+def _config_tag(cfg: PartitionConfig) -> str:
+    """Stable short fingerprint of a PartitionConfig (part of spill names)."""
+    h = hashlib.blake2b(repr(cfg).encode(), digest_size=8)
+    return h.hexdigest()
+
+
 class PlanCache:
     """LRU cache of :class:`PartitionPlan` keyed by (content hash, config).
 
     ``capacity`` counts plans, not bytes: partition metadata scales with nnz
     and serving workloads typically hold a small working set of graphs. All
     counters are monotone; ``stats()`` snapshots them.
+
+    Thread safety: every lookup/insert/evict runs under one lock, so
+    concurrent flush threads (the serving schedulers) can share a cache.
+    Builds are *single-flight*: parallel ``get_or_build`` of the same
+    (graph, config) runs the O(n) partition pipeline exactly once — the
+    first caller builds (one ``miss`` + one ``build``), the rest wait on
+    the in-flight build and then count as ``hits``. The build itself runs
+    outside the cache lock, so distinct graphs still partition in parallel.
+
+    Disk persistence (``save_dir``): evicted plans spill to
+    ``<graph_hash>-<config_tag>.npz`` (content-hash-named — safe to share
+    between processes serving the same graphs); a later miss reloads the
+    spilled plan instead of re-running the partition pipeline. ``spills`` /
+    ``disk_hits`` counters track both sides; a disk reload still counts as
+    a ``miss`` but not as a ``build``.
     """
 
-    def __init__(self, capacity: int = 32):
+    def __init__(self, capacity: int = 32, save_dir: Optional[str] = None):
         if capacity < 1:
             raise ValueError("PlanCache capacity must be >= 1")
         self.capacity = capacity
+        self.save_dir = save_dir
+        if save_dir is not None:
+            os.makedirs(save_dir, exist_ok=True)
         self._plans: "OrderedDict[Tuple[str, PartitionConfig], PartitionPlan]" = \
             OrderedDict()
+        self._lock = threading.RLock()
+        self._inflight: Dict[Tuple[str, PartitionConfig], threading.Event] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.builds = 0
+        self.spills = 0
+        self.disk_hits = 0
 
     def __len__(self) -> int:
-        return len(self._plans)
+        with self._lock:
+            return len(self._plans)
 
     def __contains__(self, key) -> bool:
-        return key in self._plans
+        with self._lock:
+            return key in self._plans
 
     def get_or_build(self, g: CSRGraph, cfg: PartitionConfig) -> PartitionPlan:
         """Return the cached plan for (g, cfg), building it on first sight."""
@@ -178,56 +210,188 @@ class PlanCache:
             key, lambda: build_partition_plan(g, cfg, graph_hash=key[0]))
 
     def get_by_key(self, key: Tuple[str, PartitionConfig],
-                   build_fn) -> PartitionPlan:
+                   build_fn: Callable[[], PartitionPlan]) -> PartitionPlan:
         """Counter-tracked lookup for callers that already hold the key (the
         serving engine hashes each graph once at registration, not per
-        request); ``build_fn`` runs only on a miss."""
-        plan = self._plans.get(key)
-        if plan is not None:
-            self.hits += 1
-            self._plans.move_to_end(key)
+        request); ``build_fn`` runs only on a miss, and only in ONE thread
+        when several miss the same key at once."""
+        while True:
+            with self._lock:
+                plan = self._plans.get(key)
+                if plan is not None:
+                    self.hits += 1
+                    self._plans.move_to_end(key)
+                    return plan
+                pending = self._inflight.get(key)
+                if pending is None:
+                    event = threading.Event()
+                    self._inflight[key] = event
+                    self.misses += 1
+            if pending is not None:
+                pending.wait()      # another thread is building this key;
+                continue            # loop back — next pass is a hit
+            try:
+                plan = self._load_from_disk(key)
+                built = plan is None
+                if built:
+                    plan = build_fn()
+                with self._lock:
+                    if built:
+                        self.builds += 1
+                    else:
+                        self.disk_hits += 1
+                    evicted = self._insert_locked(key, plan)
+                self._spill_evicted(evicted)
+            finally:
+                with self._lock:
+                    del self._inflight[key]
+                event.set()
             return plan
-        self.misses += 1
-        plan = build_fn()
-        self.builds += 1
-        self._insert(key, plan)
-        return plan
 
     def lookup(self, key: Tuple[str, PartitionConfig]) -> Optional[PartitionPlan]:
         """Counter-free peek (used by stats tooling); refreshes LRU order."""
-        plan = self._plans.get(key)
-        if plan is not None:
-            self._plans.move_to_end(key)
-        return plan
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self._plans.move_to_end(key)
+            return plan
 
     def put(self, plan: PartitionPlan) -> None:
         """Insert an externally-built plan (e.g. shipped from another host)."""
-        self._insert(plan.key, plan)
+        with self._lock:
+            evicted = self._insert_locked(plan.key, plan)
+        self._spill_evicted(evicted)
 
-    def _insert(self, key, plan: PartitionPlan) -> None:
+    def _insert_locked(self, key, plan: PartitionPlan) -> list:
+        """Insert under the lock; returns evicted plans for the caller to
+        spill AFTER releasing it (an O(nnz) .npz write must not stall every
+        concurrent lookup)."""
         if key in self._plans:
             self._plans.move_to_end(key)
         self._plans[key] = plan
+        evicted = []
         while len(self._plans) > self.capacity:
-            self._plans.popitem(last=False)
+            _, old = self._plans.popitem(last=False)
             self.evictions += 1
+            evicted.append(old)
+        return evicted
+
+    def _spill_evicted(self, evicted: list) -> None:
+        if self.save_dir is None:
+            return
+        for plan in evicted:
+            if self._spill(plan):
+                with self._lock:
+                    self.spills += 1
 
     def clear(self) -> None:
-        self._plans.clear()
+        with self._lock:
+            self._plans.clear()
 
     def keys(self):
-        return list(self._plans.keys())
+        with self._lock:
+            return list(self._plans.keys())
+
+    # ------------------------------------------------------------ disk spill
+    def _spill_path(self, key: Tuple[str, PartitionConfig]) -> str:
+        graph_hash, cfg = key
+        return os.path.join(self.save_dir, f"{graph_hash}-{_config_tag(cfg)}.npz")
+
+    def _spill(self, plan: PartitionPlan) -> bool:
+        """Write an evicted plan as a content-hash-named .npz (atomic)."""
+        path = self._spill_path(plan.key)
+        if os.path.exists(path):
+            return False        # same content already spilled (idempotent)
+        bp = plan.partition
+        payload = {
+            "n_rows": np.int64(plan.n_rows),
+            "n_cols": np.int64(plan.n_cols),
+            "nnz": np.int64(plan.nnz),
+            "slab_R": np.int64(plan.slabs["R"]),
+            "slab_C": np.int64(plan.slabs["C"]),
+            "slab_colidx": np.asarray(plan.slabs["colidx"]),
+            "slab_values": np.asarray(plan.slabs["values"]),
+            "slab_rowloc": np.asarray(plan.slabs["rowloc"]),
+            "slab_out_row": np.asarray(plan.slabs["out_row"]),
+            "inv_perm": np.asarray(plan.inv_perm),
+            "coo_row": np.asarray(plan.coo_row),
+            "coo_col": np.asarray(plan.coo_col),
+            "coo_val": np.asarray(plan.coo_val),
+            "bp_meta": bp.meta,
+            "bp_n_rows_blk": bp.n_rows_blk,
+            "bp_nnz_blk": bp.nnz_blk,
+            "bp_is_split": bp.is_split,
+            "bp_n_rows": np.int64(bp.n_rows),
+            "bp_nnz": np.int64(bp.nnz),
+        }
+        tmp = path + ".tmp"
+        try:
+            with open(tmp, "wb") as f:
+                np.savez(f, **payload)
+            os.replace(tmp, path)
+            return True
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            return False
+
+    def _load_from_disk(self, key: Tuple[str, PartitionConfig]
+                        ) -> Optional[PartitionPlan]:
+        """Reload a spilled plan; None when absent/unreadable (then rebuild)."""
+        if self.save_dir is None:
+            return None
+        path = self._spill_path(key)
+        if not os.path.exists(path):
+            return None
+        _, cfg = key
+        try:
+            with np.load(path) as z:
+                slabs = {
+                    "colidx": jnp.asarray(z["slab_colidx"]),
+                    "values": jnp.asarray(z["slab_values"]),
+                    "rowloc": jnp.asarray(z["slab_rowloc"]),
+                    "out_row": jnp.asarray(z["slab_out_row"]),
+                    "R": int(z["slab_R"]),
+                    "C": int(z["slab_C"]),
+                }
+                bp = BlockPartition(
+                    meta=z["bp_meta"],
+                    n_rows_blk=z["bp_n_rows_blk"],
+                    nnz_blk=z["bp_nnz_blk"],
+                    is_split=z["bp_is_split"],
+                    patterns=get_partition_patterns(
+                        cfg.max_block_warps, cfg.max_warp_nzs, mode=cfg.mode,
+                        max_rows_per_block=cfg.max_rows_per_block),
+                    n_rows=int(z["bp_n_rows"]),
+                    nnz=int(z["bp_nnz"]),
+                )
+                return PartitionPlan(
+                    key=key,
+                    n_rows=int(z["n_rows"]), n_cols=int(z["n_cols"]),
+                    nnz=int(z["nnz"]), slabs=slabs,
+                    inv_perm=jnp.asarray(z["inv_perm"]), partition=bp,
+                    coo_row=jnp.asarray(z["coo_row"]),
+                    coo_col=jnp.asarray(z["coo_col"]),
+                    coo_val=jnp.asarray(z["coo_val"]),
+                )
+        except Exception:       # corrupt/partial/alien spill (BadZipFile,
+            return None         # KeyError, OSError, ...): rebuild instead
 
     def stats(self) -> Dict[str, float]:
-        total = self.hits + self.misses
-        return {
-            "size": len(self._plans),
-            "capacity": self.capacity,
-            "hits": self.hits,
-            "misses": self.misses,
-            "builds": self.builds,
-            "evictions": self.evictions,
-            "hit_rate": self.hits / total if total else 0.0,
-            "device_bytes": sum(p.device_bytes()
-                                for p in self._plans.values()),
-        }
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "size": len(self._plans),
+                "capacity": self.capacity,
+                "hits": self.hits,
+                "misses": self.misses,
+                "builds": self.builds,
+                "evictions": self.evictions,
+                "spills": self.spills,
+                "disk_hits": self.disk_hits,
+                "hit_rate": self.hits / total if total else 0.0,
+                "device_bytes": sum(p.device_bytes()
+                                    for p in self._plans.values()),
+            }

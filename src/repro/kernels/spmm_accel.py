@@ -100,7 +100,7 @@ def _spmm_kernel(colidx_ref, values_ref, rowloc_ref, x_ref, out_ref, *, C, R):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_rows", "interpret", "f_tile"),
+    static_argnames=("n_rows", "interpret", "f_tile", "grid_order"),
 )
 def spmm_block_slabs(
     colidx: jax.Array,   # int32[B, C]
@@ -112,14 +112,31 @@ def spmm_block_slabs(
     *,
     f_tile: int = DEFAULT_F_TILE,
     interpret: bool = True,
+    grid_order: str = "block_major",
 ) -> jax.Array:
     """Run the Accel-GCN SpMM kernel over packed slabs; returns [n_rows, F].
+
+    ``grid_order`` picks the iteration order of the 2D grid (the ROADMAP
+    grid-order experiment; every (block, feature-tile) pair runs exactly
+    once either way, so outputs are identical):
+
+    * ``"block_major"`` (default): grid ``(B, nf)`` — the feature-tile
+      axis is innermost, so one block's slab metadata stays put while its
+      feature tiles sweep (one slab fetch per block, nf X-tile switches).
+    * ``"ft_major"``: grid ``(nf, B)`` — the block axis is innermost, so
+      ONE X feature tile stays resident across the whole block sweep; the
+      per-step revisit cost moves to the (much smaller) slab metadata.
+      This is the order that should win on real hardware once the X tile
+      dominates the per-step DMA traffic.
 
     Raises :class:`repro.kernels.router.VmemBudgetError` when the resident
     X tile would not fit the VMEM budget (N_pad > 4096 at f32 defaults);
     oversized graphs belong to ``spmm_block_slabs_windowed`` or the HBM
     gather kernel — ``backend="auto"`` picks for you.
     """
+    if grid_order not in ("block_major", "ft_major"):
+        raise ValueError(
+            f"grid_order must be block_major|ft_major, got {grid_order!r}")
     B, C = colidx.shape
     R = out_row.shape[1]
     N, F = x.shape
@@ -133,17 +150,26 @@ def spmm_block_slabs(
     x_p = jnp.zeros((N_pad, F_pad), x.dtype).at[:N, :F].set(x)
     nf = F_pad // f_tile
 
-    grid = (B, nf)
+    if grid_order == "block_major":
+        grid = (B, nf)
+        block_ix = lambda b, j: (b, 0)          # noqa: E731
+        x_ix = lambda b, j: (0, j)              # noqa: E731
+        out_ix = lambda b, j: (b, 0, j)         # noqa: E731
+    else:  # ft_major: (feature-tile, block) — block axis innermost
+        grid = (nf, B)
+        block_ix = lambda j, b: (b, 0)          # noqa: E731
+        x_ix = lambda j, b: (0, j)              # noqa: E731
+        out_ix = lambda j, b: (b, 0, j)         # noqa: E731
     out_slabs = pl.pallas_call(
         functools.partial(_spmm_kernel, C=C, R=R),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, C), lambda b, j: (b, 0)),
-            pl.BlockSpec((1, C), lambda b, j: (b, 0)),
-            pl.BlockSpec((1, C), lambda b, j: (b, 0)),
-            pl.BlockSpec((N_pad, f_tile), lambda b, j: (0, j)),
+            pl.BlockSpec((1, C), block_ix),
+            pl.BlockSpec((1, C), block_ix),
+            pl.BlockSpec((1, C), block_ix),
+            pl.BlockSpec((N_pad, f_tile), x_ix),
         ],
-        out_specs=pl.BlockSpec((1, R, f_tile), lambda b, j: (b, 0, j)),
+        out_specs=pl.BlockSpec((1, R, f_tile), out_ix),
         out_shape=jax.ShapeDtypeStruct((B, R, F_pad), jnp.float32),
         interpret=interpret,
     )(colidx, values, rowloc, x_p)

@@ -139,6 +139,7 @@ def spmm_batched(
     interpret: bool = True,
     pad_blocks_to: Optional[int] = None,
     return_decision: bool = False,
+    grid_order: str = "block_major",
 ) -> List[jax.Array] | Tuple[List[jax.Array], Optional[RoutingDecision]]:
     """Fused SpMM over several graphs; returns one ``[n_rows_g, F_g]`` output
     per graph (degree-sorted row order, same as the single-graph kernel).
@@ -152,6 +153,11 @@ def spmm_batched(
     ``windowed`` / ``hbm`` force those variants; ``blocked`` is the portable
     jnp twin. With ``return_decision=True`` the routing record (or ``None``
     for ``blocked``) comes back alongside the outputs.
+
+    ``grid_order`` ("block_major" | "ft_major") selects the resident
+    kernel's grid iteration order (see
+    :func:`repro.kernels.spmm_accel.spmm_block_slabs`); dispatches that
+    route to the windowed/HBM kernels ignore it.
     """
     G = len(slab_list)
     assert G == len(x_list) == len(n_rows_list) and G > 0
@@ -176,10 +182,12 @@ def spmm_batched(
         decision = route_spmm(n_x, F, int(merged["C"]),
                               int(merged["R"]), force=force)
         kernel = _PALLAS_KERNELS[decision.backend]
+        kernel_kwargs = ({"grid_order": grid_order}
+                         if decision.backend == "resident" else {})
         out = kernel(
             jnp.asarray(merged["colidx"]), jnp.asarray(merged["values"]),
             jnp.asarray(merged["rowloc"]), jnp.asarray(merged["out_row"]),
-            x_cat, n_out, interpret=interpret)
+            x_cat, n_out, interpret=interpret, **kernel_kwargs)
     elif backend == "blocked":
         from .ops import spmm_blocked  # deferred: ops re-exports this module
         out = spmm_blocked(

@@ -201,8 +201,19 @@ class KVCache(NamedTuple):
 
 
 def attention_decode(p, x, cache: KVCache, pos: jax.Array, *, n_heads, n_kv_heads,
-                     d_head, rope_theta=None, softcap=None, window=None, scale=None):
+                     d_head, rope_theta=None, softcap=None, window=None, scale=None,
+                     start=None):
     """One-token decode. x: [B, 1, D_model]; pos: scalar current length.
+
+    ``start`` (optional int32[B]) is the per-slot sequence start: cache
+    positions below ``start[b]`` are masked out for batch slot ``b``. This
+    is what makes decode-slot reuse sound — a slot admitted mid-stream at
+    position p sets start=p and never attends to the previous occupant's
+    stale keys. Rope scores depend only on position differences, so a
+    sequence started at p matches one started at 0 (up to low-precision
+    cache rounding: bf16 quantizes differently-rotated keys differently,
+    ~1% on logits — greedy samples can occasionally differ, exactly like
+    any continuous-batching server vs an offline run).
 
     Returns (out [B,1,D_model], new_cache).
     """
@@ -232,7 +243,11 @@ def attention_decode(p, x, cache: KVCache, pos: jax.Array, *, n_heads, n_kv_head
     valid = kpos <= pos
     if window is not None:
         valid &= kpos > pos - window
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    if start is None:
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+    else:  # per-slot mask [B, S]: drop positions before each slot's start
+        valid_b = valid[None, :] & (kpos[None, :] >= start[:, None])
+        s = jnp.where(valid_b[:, None, None, :], s, NEG_INF)
     pattn = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", pattn.astype(vc_.dtype), vc_,
                      preferred_element_type=jnp.float32)

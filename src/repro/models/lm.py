@@ -492,6 +492,11 @@ def prefill_forward(cfg: ArchConfig, params, inputs, *, q_chunk=512,
 class DecodeState(NamedTuple):
     caches: Any        # family-specific pytree, layer-stacked
     pos: jax.Array     # scalar int32: tokens already in cache
+    # per-slot sequence start (int32[B]); None = every slot started at 0.
+    # A slot reused mid-stream (continuous batching) sets start[b] to the
+    # admission position so attention never sees the previous occupant's
+    # stale cache entries; see reset_decode_slot.
+    start: Optional[jax.Array] = None
 
 
 def pad_prefill_caches(cfg: ArchConfig, state: "DecodeState", max_seq: int
@@ -506,7 +511,7 @@ def pad_prefill_caches(cfg: ArchConfig, state: "DecodeState", max_seq: int
             cfgpad = [(0, 0)] * kv.k.ndim
             cfgpad[seq_axis] = (0, pad)
             caches[key] = A.KVCache(jnp.pad(kv.k, cfgpad), jnp.pad(kv.v, cfgpad))
-    return DecodeState(caches, state.pos)
+    return DecodeState(caches, state.pos, state.start)
 
 
 def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int) -> DecodeState:
@@ -557,12 +562,55 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int) -> DecodeState:
     raise ValueError(f"{cfg.family} has no decode step")
 
 
-def _attn_decode_block(cfg, p, h, kv, pos, *, local=False):
+def track_slot_starts(state: DecodeState, batch: int) -> DecodeState:
+    """Enable per-slot sequence-start tracking on a decode state (required
+    before :func:`reset_decode_slot`); all slots start at position 0."""
+    if state.start is not None:
+        return state
+    return DecodeState(state.caches, state.pos,
+                       jnp.zeros((batch,), jnp.int32))
+
+
+def _zero_batch_slot(tree, batch_axis: int, slot: int):
+    def z(a):
+        idx = (slice(None),) * batch_axis + (slot,)
+        return a.at[idx].set(jnp.zeros_like(a[idx]))
+    return jax.tree.map(z, tree)
+
+
+def reset_decode_slot(cfg: ArchConfig, state: DecodeState, slot: int
+                      ) -> DecodeState:
+    """Recycle batch slot ``slot`` for a NEW sequence starting at the
+    current position (continuous-batching slot reuse).
+
+    Attention caches need no rewrite: ``start[slot] = pos`` masks every
+    stale cache position for that slot, and rope attention scores depend
+    only on position differences, so a sequence admitted at position p is
+    equivalent to one started at 0. Recurrent (mamba) state is genuinely
+    stateful, so the slot's conv/ssm entries are zeroed — a zero state IS
+    the fresh-sequence initial state.
+    """
+    if state.start is None:
+        raise ValueError("state has no per-slot start tracking; wrap it "
+                         "with track_slot_starts(state, batch) first")
+    caches = dict(state.caches)
+    if "mamba" in caches:
+        # ssm: [n_layers, B, ...]; hybrid groups: [n_groups, g, B, ...]
+        axis = 2 if cfg.family == "hybrid" else 1
+        caches["mamba"] = _zero_batch_slot(caches["mamba"], axis, slot)
+    if "mamba_tail" in caches:
+        caches["mamba_tail"] = _zero_batch_slot(caches["mamba_tail"], 1, slot)
+    return DecodeState(caches, state.pos,
+                       state.start.at[slot].set(state.pos))
+
+
+def _attn_decode_block(cfg, p, h, kv, pos, *, local=False, start=None):
     a_in = _norm(cfg, p["ln1"], h)
     attn_out, kv = A.attention_decode(
         p["attn"], a_in, kv, pos, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
         d_head=cfg.d_head, rope_theta=cfg.rope_theta, softcap=cfg.attn_softcap,
-        window=cfg.sliding_window if local else None, scale=cfg.attn_scale)
+        window=cfg.sliding_window if local else None, scale=cfg.attn_scale,
+        start=start)
     if cfg.post_block_norm:
         attn_out = _norm(cfg, p["ln1_post"], attn_out)
     h = h + attn_out
@@ -583,6 +631,7 @@ def decode_step(cfg: ArchConfig, params, tokens: jax.Array, state: DecodeState
     """One-token step for the whole batch. tokens: [B, 1] -> logits [B, V]."""
     h = embed_inputs(cfg, params, tokens)
     pos = state.pos
+    start = state.start
     caches = dict(state.caches)
     fam = cfg.family
 
@@ -590,7 +639,7 @@ def decode_step(cfg: ArchConfig, params, tokens: jax.Array, state: DecodeState
         if fam == "moe" and "kv_dense" in caches:
             def dbody(hh, args):
                 lp, kv = args
-                hh, kv = _attn_decode_block(cfg, lp, hh, kv, pos)
+                hh, kv = _attn_decode_block(cfg, lp, hh, kv, pos, start=start)
                 return hh, kv
             h, kvd = _scan(dbody, h, (params["dense_layers"], caches["kv_dense"]))
             caches["kv_dense"] = kvd
@@ -600,15 +649,16 @@ def decode_step(cfg: ArchConfig, params, tokens: jax.Array, state: DecodeState
                 lp, kv = args
                 hh, kv0 = _attn_decode_block(cfg, jax.tree.map(lambda x: x[0], lp), hh,
                                              jax.tree.map(lambda x: x[0], kv), pos,
-                                             local=True)
+                                             local=True, start=start)
                 hh, kv1 = _attn_decode_block(cfg, jax.tree.map(lambda x: x[1], lp), hh,
-                                             jax.tree.map(lambda x: x[1], kv), pos)
+                                             jax.tree.map(lambda x: x[1], kv), pos,
+                                             start=start)
                 kv = jax.tree.map(lambda a, b: jnp.stack([a, b]), kv0, kv1)
                 return hh, kv
         else:
             def body(hh, args):
                 lp, kv = args
-                return _attn_decode_block(cfg, lp, hh, kv, pos)
+                return _attn_decode_block(cfg, lp, hh, kv, pos, start=start)
         h, kvs = _scan(body, h, (params["layers"], caches["kv"]))
         caches["kv"] = kvs
 
@@ -647,7 +697,7 @@ def decode_step(cfg: ArchConfig, params, tokens: jax.Array, state: DecodeState
                                      @ lora["b_i"].astype(jnp.float32)
                                      ).astype(mlp["wi"].dtype)
             p2 = {**p, "attn": attn, "mlp": mlp}
-            hh, kv = _attn_decode_block(cfg, p2, hh, kv, pos)
+            hh, kv = _attn_decode_block(cfg, p2, hh, kv, pos, start=start)
             return hh, (mc, kv)
 
         h, (mcs, kvs) = _scan(
@@ -668,4 +718,4 @@ def decode_step(cfg: ArchConfig, params, tokens: jax.Array, state: DecodeState
 
     h = _norm(cfg, params["final_norm"], h)
     logits = lm_logits(cfg, params, h)[:, 0]
-    return logits, DecodeState(caches, pos + 1)
+    return logits, DecodeState(caches, pos + 1, start)

@@ -1,2 +1,3 @@
-from .engine import ServeEngine  # noqa: F401
+from .engine import Request, ServeEngine  # noqa: F401
 from .graph_engine import GraphRequest, GraphServeEngine  # noqa: F401
+from .scheduler import BatchScheduler, QueueFullError, WorkItem  # noqa: F401

@@ -1,36 +1,57 @@
-"""Graph inference serving: plan-cached, multi-graph-batched SpMM dispatch.
+"""Graph inference serving: continuous-batched, plan-cached SpMM dispatch.
 
-The serving shape of the Accel-GCN operator: requests name a registered graph
-and carry a feature matrix; the engine
+Serving architecture (scheduler -> flush -> route -> dispatch)::
 
-1. resolves each graph to its cached :class:`PartitionPlan` (the O(n)
-   preprocessing — degree sort, pattern table, slab packing — runs once per
-   distinct graph and config, then is a cache hit forever);
-2. merges same-graph requests along the feature axis (one gather of the
-   slabs serves every concurrent request on that graph);
-3. packs up to ``max_graphs_per_batch`` distinct graphs into ONE fused
-   kernel dispatch (`repro.kernels.spmm_batched`), with block-count
-   bucketing so repeated batches reuse a single compiled kernel;
-4. routes each fused dispatch by VMEM footprint (``backend="auto"``):
-   the concatenated feature rows of a batch can overflow the resident
-   kernel's budget even when every member graph fits, so oversized batches
-   fall back to the row-windowed or HBM-gather kernel instead of silently
-   blowing the budget — per-dispatch choices are logged and counted in
-   ``stats()`` (``routed_resident`` / ``routed_windowed`` / ``routed_hbm``);
-5. un-permutes each graph's rows back to original order and splits feature
-   columns back per request.
+    callers ----- submit(graph_id, x) -> Future ------.
+    threads ----- submit(graph_id, x) -> Future ------+--> BatchScheduler
+    serve(reqs) - submit_many (sync wrapper) ---------'    admission queue
+                                                               |
+                               flush (size >= max_batch_requests, or the
+                               oldest request is max_wait_ms old)
+                                                               |
+                                  _flush: group requests BY PLAN (graph),
+                                  fuse same-graph features along the F
+                                  axis, chunk distinct graphs into
+                                  dispatches of <= max_graphs_per_batch
+                                                               |
+                                  _dispatch: merge slabs, bucket blocks,
+                                  route by VMEM footprint (auto: resident /
+                                  windowed / hbm), ONE fused pallas_call
+                                                               |
+                                  un-permute rows, split feature columns,
+                                  item.complete(out) resolves each Future
 
-Throughput/latency counters accumulate across ``serve`` calls; ``stats()``
-merges them with the plan cache's hit/miss/build/eviction counters. Each
-request records its enqueue->answer wall time (queue wait included);
-per-dispatch kernel time accumulates separately in ``total_serve_s``.
+The background admission queue is what makes batching *cross-caller*: the
+old blocking ``serve()`` could only fuse requests its own caller had
+already collected, so two concurrent callers never shared a dispatch and
+the plan cache was touched from multiple threads without a lock. Now every
+entry point funnels into one scheduler ( :mod:`repro.serve.scheduler` ),
+requests on recurring graphs coalesce into fused dispatches no matter who
+submitted them, and the (thread-safe) plan cache is read from the single
+flush thread.
+
+Tuning knobs:
+
+* ``max_batch_requests`` / ``max_wait_ms`` — scheduler flush triggers.
+  ``max_wait_ms`` bounds the co-batching wait of a lone request; under
+  sustained load flushes are size-triggered and the knob is irrelevant.
+* ``max_graphs_per_batch`` — distinct graphs fused into one kernel call
+  (a flush larger than this becomes several dispatches, in arrival order).
+* ``max_pending`` — admission bound; full queue blocks submitters
+  (backpressure) or raises with ``submit(..., block=False)``.
+
+Per-request (enqueue->answer) latency comes from the scheduler's WorkItem
+clock; per-dispatch kernel time accumulates separately in ``total_serve_s``.
+``stats()`` merges engine counters, plan-cache counters (``cache_*``) and
+scheduler counters (``sched_*``).
 """
 from __future__ import annotations
 
 import dataclasses
 import logging
 import time
-from typing import Dict, List, Optional, Sequence
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +62,7 @@ from ..core.plan_cache import (
 )
 from ..kernels.router import RoutingDecision
 from ..kernels.spmm_batched import bucket_blocks, spmm_batched
+from .scheduler import BatchScheduler, WorkItem
 
 __all__ = ["GraphRequest", "GraphServeEngine"]
 
@@ -57,12 +79,18 @@ class GraphRequest:
     x: jax.Array                       # [n_cols(graph), F]
     out: Optional[jax.Array] = None    # filled by serve()
     latency_s: Optional[float] = None  # enqueue -> answer wall time (includes
-    #                                    queue wait behind earlier dispatches
-    #                                    of the same serve() call)
+    #                                    queue wait behind earlier dispatches)
 
 
 class GraphServeEngine:
-    """Batched multi-graph SpMM server over a partition-plan cache."""
+    """Continuous-batching multi-graph SpMM server over a partition-plan cache.
+
+    ``submit`` is the native entry point (asynchronous, returns a
+    ``Future``); ``serve``/``serve_one`` are thin synchronous wrappers that
+    submit and wait, kept for backward compatibility — all three share the
+    scheduler, so synchronous callers still coalesce with concurrent
+    submitters.
+    """
 
     def __init__(
         self,
@@ -74,6 +102,10 @@ class GraphServeEngine:
         interpret: bool = True,
         max_graphs_per_batch: int = 8,
         block_bucket: Optional[int] = 8,
+        max_batch_requests: Optional[int] = None,
+        max_wait_ms: float = 2.0,
+        max_pending: int = 256,
+        feature_bucket: bool = True,
     ):
         self.config = config or PartitionConfig()
         self.cache = cache if cache is not None else PlanCache(cache_capacity)
@@ -86,11 +118,26 @@ class GraphServeEngine:
         # below 2x the live blocks (the old fixed-256 floor padded a 3-block
         # batch to 256 — 85x dead grid steps).
         self.block_bucket = block_bucket
+        # fused feature widths round up to powers of two: the width of a
+        # same-graph group is (requests in flush) x F, which varies with
+        # flush composition under concurrent traffic — bucketing keeps the
+        # compiled-shape set logarithmic instead of one shape per mix
+        self.feature_bucket = feature_bucket
         self._graphs: Dict[str, CSRGraph] = {}
         self._keys: Dict[str, tuple] = {}  # graph_id -> plan key (hashed once)
-        # serving counters
+        # one flush absorbs several dispatches' worth of requests so a
+        # deadline-triggered flush under load still fills whole batches
+        self.scheduler = BatchScheduler(
+            self._flush,
+            max_batch=max_batch_requests or 4 * max_graphs_per_batch,
+            max_wait_ms=max_wait_ms,
+            max_queue=max_pending,
+            name="graph-serve",
+        )
+        # serving counters (mutated only on the scheduler's flush thread)
         self.requests_served = 0
         self.batches_dispatched = 0
+        self.graphs_dispatched = 0   # distinct graphs summed over dispatches
         self.rows_served = 0
         self.values_served = 0       # rows * feature columns
         self.total_serve_s = 0.0     # sum of per-DISPATCH kernel wall times
@@ -128,55 +175,116 @@ class GraphServeEngine:
             key, lambda: build_partition_plan(
                 self._graphs[graph_id], self.config, graph_hash=key[0]))
 
+    def close(self) -> None:
+        """Stop the background scheduler (drains anything still queued)."""
+        self.scheduler.stop()
+
     # ------------------------------------------------------------------ serve
+    def _validate(self, graph_id: str, x) -> None:
+        """Cheap synchronous admission checks: registration + feature shape.
+
+        Deliberately does NOT touch the plan cache — the registered graph
+        already knows its n_cols, so validation stays O(1) on the caller
+        thread and plan resolution (which can mean an O(n) rebuild after an
+        eviction) happens on the flush thread where it belongs.
+        """
+        g = self._graphs.get(graph_id)
+        if g is None:
+            raise KeyError(f"graph {graph_id!r} not registered "
+                           f"(known: {sorted(self._graphs)})")
+        shape = tuple(getattr(x, "shape", ()))
+        if len(shape) != 2 or shape[0] != g.n_cols:
+            raise ValueError(
+                f"request for {graph_id!r} has features {shape}, "
+                f"expected [{g.n_cols}, F]")
+
+    def submit(self, graph_id: str, x: jax.Array, *,
+               block: bool = True) -> Future:
+        """Admit one request; returns a ``Future`` of the ``[n_rows, F]``
+        aggregation in ORIGINAL row order.
+
+        Validation (unknown graph, wrong feature shape) raises here,
+        synchronously. A full admission queue blocks (backpressure) or,
+        with ``block=False``, raises
+        :class:`repro.serve.scheduler.QueueFullError`.
+        """
+        self._validate(graph_id, x)
+        return self.scheduler.submit((graph_id, x), block=block).future
+
     def serve_one(self, graph_id: str, x: jax.Array) -> jax.Array:
         """Convenience single-request path (still goes through the batch code)."""
         return self.serve([GraphRequest(graph_id, x)])[0].out
 
     def serve(self, requests: Sequence[GraphRequest]) -> List[GraphRequest]:
-        """Answer a list of requests, batching as aggressively as possible."""
-        t_enqueue = time.perf_counter()   # latency clock for EVERY request
-        # Group same-graph requests: their features fuse along the F axis so
-        # the slab gather runs once for all of them.
-        order: List[str] = []
-        groups: Dict[str, List[GraphRequest]] = {}
+        """Synchronous wrapper: submit every request and wait for all answers.
+
+        Validates EVERY request before admitting ANY, so a malformed
+        request cannot leave the call half-served with mutated counters.
+        The requests enter the admission queue as one contiguous run and
+        typically share flushes (and fused dispatches) — including with
+        requests other threads submitted concurrently.
+        """
         for r in requests:
-            if r.graph_id not in self._graphs:
-                raise KeyError(f"graph {r.graph_id!r} not registered "
-                               f"(known: {sorted(self._graphs)})")
-            if r.graph_id not in groups:
-                groups[r.graph_id] = []
-                order.append(r.graph_id)
-            groups[r.graph_id].append(r)
-
-        # Validate EVERY request before dispatching ANY batch, so a malformed
-        # request cannot leave the call half-served with mutated counters.
-        plans = {gid: self.plan_for(gid) for gid in order}
-        for gid in order:
-            for r in groups[gid]:
-                shape = tuple(getattr(r.x, "shape", ()))
-                if len(shape) != 2 or shape[0] != plans[gid].n_cols:
-                    raise ValueError(
-                        f"request for {gid!r} has features {shape}, "
-                        f"expected [{plans[gid].n_cols}, F]")
-
-        for start in range(0, len(order), self.max_graphs_per_batch):
-            self._dispatch([(gid, groups[gid], plans[gid])
-                            for gid in order[start:start + self.max_graphs_per_batch]],
-                           t_enqueue)
+            self._validate(r.graph_id, r.x)
+        items = self.scheduler.submit_many([(r.graph_id, r.x)
+                                            for r in requests])
+        first_exc: Optional[BaseException] = None
+        for r, item in zip(requests, items):
+            try:
+                r.out = item.future.result()
+                r.latency_s = item.latency_s
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                if first_exc is None:
+                    first_exc = e
+        if first_exc is not None:
+            raise first_exc
         return list(requests)
 
-    def _dispatch(self, batch, t_enqueue: float) -> None:
+    # ------------------------------------------------------------------ flush
+    def _flush(self, items: List[WorkItem]) -> None:
+        """Scheduler flush callback: group by plan, fuse, dispatch in chunks.
+
+        Runs on the scheduler thread. Requests naming the same graph fuse
+        along the feature axis (one slab gather serves all of them);
+        distinct graphs chunk into fused dispatches of up to
+        ``max_graphs_per_batch`` in order of first appearance.
+        """
+        order: List[str] = []
+        groups: Dict[str, List[WorkItem]] = {}
+        for item in items:
+            gid, _ = item.payload
+            if gid not in groups:
+                groups[gid] = []
+                order.append(gid)
+            groups[gid].append(item)
+        plans = {gid: self.plan_for(gid) for gid in order}
+
+        # a raising dispatch aborts the remaining chunks: their items are
+        # failed by the scheduler with the same exception, while items of
+        # already-dispatched chunks keep their results
+        for start in range(0, len(order), self.max_graphs_per_batch):
+            chunk = order[start:start + self.max_graphs_per_batch]
+            self._dispatch([(gid, groups[gid], plans[gid]) for gid in chunk])
+
+    def _dispatch(self, batch: List[Tuple[str, List[WorkItem],
+                                          PartitionPlan]]) -> None:
         """One fused kernel call over up to max_graphs_per_batch graphs."""
         t0 = time.perf_counter()
         plans: List[PartitionPlan] = []
         xs: List[jax.Array] = []
         col_splits: List[List[int]] = []
-        for gid, reqs, plan in batch:
-            feats = [jnp.asarray(r.x, dtype=jnp.float32) for r in reqs]
+        for gid, grp, plan in batch:
+            feats = [jnp.asarray(it.payload[1], dtype=jnp.float32)
+                     for it in grp]
             plans.append(plan)
-            xs.append(feats[0] if len(feats) == 1
-                      else jnp.concatenate(feats, axis=1))
+            x = (feats[0] if len(feats) == 1
+                 else jnp.concatenate(feats, axis=1))
+            if self.feature_bucket:
+                w = int(x.shape[1])
+                pad = bucket_blocks(w, 1) - w   # next power of two
+                if pad:
+                    x = jnp.pad(x, ((0, 0), (0, pad)))
+            xs.append(x)
             col_splits.append([int(f.shape[1]) for f in feats])
 
         b_total = sum(p.num_blocks for p in plans)
@@ -188,9 +296,7 @@ class GraphServeEngine:
             backend=self.backend, interpret=self.interpret,
             pad_blocks_to=pad_to, return_decision=True)
         jax.block_until_ready(outs)
-        t_done = time.perf_counter()
-        dt = t_done - t0                       # this dispatch's kernel time
-        latency = t_done - t_enqueue           # enqueue -> answer, incl. queue
+        dt = time.perf_counter() - t0         # this dispatch's kernel time
 
         executed = decision.backend if decision is not None else "blocked"
         self.backend_dispatches[executed] += 1
@@ -203,23 +309,32 @@ class GraphServeEngine:
                 len(batch), b_total, pad_to or b_total, executed,
                 decision.reason if decision else "jnp twin", dt * 1e3)
 
-        for (gid, reqs, plan), out, widths in zip(batch, outs, col_splits):
+        # update every counter BEFORE resolving any future: a synchronous
+        # caller unblocks the moment its future resolves and may read
+        # stats() immediately
+        now = time.perf_counter()
+        answers: List[Tuple[WorkItem, jax.Array]] = []
+        for (gid, grp, plan), out, widths in zip(batch, outs, col_splits):
             out = out[plan.inv_perm]          # back to original row order
             col = 0
-            for r, w in zip(reqs, widths):
-                r.out = out[:, col:col + w]
-                r.latency_s = latency
+            for item, w in zip(grp, widths):
+                answers.append((item, out[:, col:col + w]))
                 col += w
                 self.requests_served += 1
                 self.rows_served += plan.n_rows
                 self.values_served += plan.n_rows * w
-                self.total_request_latency_s += latency
+                self.total_request_latency_s += now - item.t_enqueue
         self.batches_dispatched += 1
+        self.graphs_dispatched += len(batch)
         self.total_serve_s += dt
+        for item, result in answers:
+            item.complete(result)
 
     # ------------------------------------------------------------------ stats
     def stats(self) -> Dict[str, float]:
         s = {f"cache_{k}": v for k, v in self.cache.stats().items()}
+        s.update({f"sched_{k}": v
+                  for k, v in self.scheduler.stats().items()})
         s.update(
             registered_graphs=len(self._graphs),
             requests_served=self.requests_served,
@@ -229,6 +344,10 @@ class GraphServeEngine:
             total_serve_s=self.total_serve_s,
             requests_per_batch=(self.requests_served / self.batches_dispatched
                                 if self.batches_dispatched else 0.0),
+            # cross-caller coalescing: >1 means fused multi-graph dispatches
+            graphs_per_dispatch=(self.graphs_dispatched
+                                 / self.batches_dispatched
+                                 if self.batches_dispatched else 0.0),
             rows_per_s=(self.rows_served / self.total_serve_s
                         if self.total_serve_s else 0.0),
             # routing: which kernel regime each fused dispatch executed on

@@ -1,0 +1,393 @@
+"""Continuous-batching core shared by the token and graph serving engines.
+
+Serving architecture (both engines)::
+
+    callers --- submit(payload) ----> [ admission queue (bounded) ]
+                                             |
+                     flush trigger: size >= max_batch OR oldest item
+                     older than max_wait_ms OR drain on stop()
+                                             |
+                                     [ flush callback ]      (engine-owned)
+                    graph engine: group by plan -> fuse feature axis
+                                  -> route by VMEM -> fused kernel dispatch
+                    token engine: admit into decode slots -> step loop,
+                                  finished slots refilled via take_ready()
+                                             |
+                            item.complete(result) resolves the future
+
+The point of the shared core: *cross-caller* batching. A blocking
+``serve(requests)`` API can only fuse work the caller already collected;
+with an admission queue, requests from N concurrent callers land in one
+flush and share a single fused dispatch — the partition-plan amortization
+of the paper (degree sort + block partition built once, reused by every
+request on that graph) pays off across the whole process, not per call
+site. AWB-GCN's runtime-rebalancing argument is the hardware-side version
+of the same point: balance whatever work is *in flight*, not per call.
+
+Components:
+
+* :class:`WorkItem` — one admitted request: payload + ``Future`` + enqueue
+  timestamp. The flush callback answers items with ``complete(result)`` /
+  ``fail(exc)``; the scheduler records enqueue->answer latency at that
+  moment. Items a flush leaves unanswered are failed by the scheduler so
+  no caller ever blocks forever.
+* :class:`BatchScheduler` — the background flush thread. ``submit`` /
+  ``submit_many`` enqueue (with backpressure: block, or raise
+  :class:`QueueFullError` with ``block=False``); ``take_ready`` lets a
+  running flush pull newly-arrived work mid-flight (the token engine's
+  slot reuse); ``stats()`` reports queue depth, flush-reason counts and
+  latency percentiles — one stats vocabulary for both engines.
+
+Tuning knobs:
+
+* ``max_batch`` — flush as soon as this many items are queued. Bound it by
+  what one fused dispatch can absorb (the graph engine separately chunks a
+  flush into dispatches of ``max_graphs_per_batch`` distinct graphs).
+* ``max_wait_ms`` — deadline flush: the oldest queued item never waits
+  longer than this for co-batchable traffic. Raise it to trade tail
+  latency for larger fused batches; lower it toward 0 for latency-first
+  serving (each flush then carries whatever arrived during the previous
+  dispatch — still cross-caller batching under load).
+* ``max_queue`` — admission bound. When the queue is full, ``submit``
+  blocks (backpressure propagates to callers) or raises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+__all__ = ["QueueFullError", "WorkItem", "BatchScheduler", "percentile"]
+
+
+class QueueFullError(RuntimeError):
+    """Admission rejected: the queue is at ``max_queue`` (backpressure)."""
+
+
+def percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile of an already-sorted sequence (0 <= q <= 1)."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, max(0, int(q * len(sorted_vals))))
+    return float(sorted_vals[idx])
+
+
+class WorkItem:
+    """One admitted request: payload, future, and latency bookkeeping."""
+
+    __slots__ = ("payload", "future", "t_enqueue", "t_done", "_sched")
+
+    def __init__(self, payload: Any, sched: "BatchScheduler"):
+        self.payload = payload
+        self.future: Future = Future()
+        self.t_enqueue = time.perf_counter()
+        self.t_done: Optional[float] = None
+        self._sched = sched
+
+    @property
+    def done(self) -> bool:
+        return self.future.done()
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Enqueue -> answer wall time (queue wait included); None until done."""
+        return None if self.t_done is None else self.t_done - self.t_enqueue
+
+    def complete(self, result: Any) -> None:
+        """Resolve the item's future and record its latency."""
+        if self.future.done():
+            return
+        self.t_done = time.perf_counter()
+        self._sched._record_done(self, failed=False)
+        self.future.set_result(result)
+
+    def fail(self, exc: BaseException) -> None:
+        if self.future.done():
+            return
+        self.t_done = time.perf_counter()
+        self._sched._record_done(self, failed=True)
+        self.future.set_exception(exc)
+
+
+class BatchScheduler:
+    """Background-thread continuous batcher with size/deadline flush triggers.
+
+    ``flush_fn(items)`` runs on the scheduler thread with a batch of up to
+    ``max_batch`` :class:`WorkItem`; it must answer every item (via
+    ``complete``/``fail``) — stragglers are failed by the scheduler, and a
+    raising flush fails every unanswered item of that flush with the raised
+    exception. ``flush_fn`` may call :meth:`take_ready` to pull extra
+    queued items into the running flush (slot reuse); those pulled items
+    join the flush's failure scope.
+
+    The worker thread is a daemon and starts lazily on first submit, so
+    constructing an engine never spawns a thread it won't use.
+    """
+
+    # latency ring size: enough for stable p99 without unbounded growth
+    _LAT_WINDOW = 4096
+
+    def __init__(
+        self,
+        flush_fn: Callable[[List[WorkItem]], None],
+        *,
+        max_batch: int = 8,
+        max_wait_ms: float = 5.0,
+        max_queue: int = 256,
+        name: str = "batch-scheduler",
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        if max_wait_ms < 0:
+            raise ValueError("max_wait_ms must be >= 0")
+        self.flush_fn = flush_fn
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self.max_queue = max_queue
+        self.name = name
+
+        self._cond = threading.Condition()
+        self._queue: "deque[WorkItem]" = deque()
+        self._thread: Optional[threading.Thread] = None
+        self._running = False
+        self._closing = False     # stop() in progress: admissions raise
+        self._current_extra: List[WorkItem] = []  # take_ready pulls, per flush
+
+        # counters (guarded by _cond; all monotone)
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.rejected = 0            # QueueFullError admissions
+        self.flushes = 0
+        self.items_flushed = 0
+        self.mid_flush_admissions = 0  # items pulled by take_ready
+        self.flush_reasons: Dict[str, int] = {
+            "size": 0, "deadline": 0, "drain": 0}
+        self.peak_queue_depth = 0
+        self._latencies: "deque[float]" = deque(maxlen=self._LAT_WINDOW)
+        self._total_latency_s = 0.0
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        with self._cond:
+            self._ensure_started_locked()
+
+    def _ensure_started_locked(self) -> None:
+        """Guarantee a live worker exists for subsequently-enqueued items.
+
+        Called (under the lock) immediately before EVERY enqueue — including
+        after a backpressure wait, during which the scheduler may have been
+        stopped — so no item can enter a queue nothing will drain. While a
+        ``stop()`` is in progress admissions raise instead of resurrecting
+        the worker out from under the join.
+        """
+        if self._closing:
+            raise RuntimeError(f"{self.name}: scheduler is stopping")
+        self._running = True
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._worker, name=self.name, daemon=True)
+            self._thread.start()
+
+    @property
+    def running(self) -> bool:
+        return self._running
+
+    def stop(self, timeout: Optional[float] = None) -> None:
+        """Stop the worker, draining (flushing) everything still queued.
+
+        Concurrent ``submit`` calls racing a stop get ``RuntimeError``;
+        after stop returns, a new submit restarts the scheduler cleanly.
+        """
+        with self._cond:
+            self._running = False
+            self._closing = True
+            self._cond.notify_all()
+            thread = self._thread
+        try:
+            if thread is not None:
+                thread.join(timeout)
+        finally:
+            with self._cond:
+                self._closing = False
+
+    def __enter__(self) -> "BatchScheduler":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------ admission
+    def submit(self, payload: Any, *, block: bool = True,
+               timeout: Optional[float] = None) -> WorkItem:
+        """Admit one payload; returns its :class:`WorkItem` (with ``.future``).
+
+        A full queue blocks (backpressure) until a flush drains it, or
+        raises :class:`QueueFullError` when ``block=False`` or ``timeout``
+        expires.
+        """
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._cond:
+            self._ensure_started_locked()
+            while len(self._queue) >= self.max_queue:
+                if not block:
+                    self.rejected += 1
+                    raise QueueFullError(
+                        f"{self.name}: queue full ({self.max_queue})")
+                remaining = (None if deadline is None
+                             else deadline - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    self.rejected += 1
+                    raise QueueFullError(
+                        f"{self.name}: queue full ({self.max_queue}) "
+                        f"after {timeout}s")
+                self._cond.wait(remaining)
+            # the wait may have outlived a stop(): re-ensure a live worker
+            self._ensure_started_locked()
+            return self._enqueue_locked(payload)
+
+    def submit_many(self, payloads: Sequence[Any], *,
+                    block: bool = True) -> List[WorkItem]:
+        """Atomically admit several payloads: they enter the queue as one
+        contiguous run, so a single flush sees them together (this is what
+        keeps the synchronous ``serve(requests)`` wrapper's batching
+        semantics). Blocks until the whole run fits — or, when the run is
+        larger than ``max_queue``, until the queue is empty (the run is
+        then admitted as an oversized burst rather than deadlocking).
+        """
+        payloads = list(payloads)
+        if not payloads:
+            return []
+        with self._cond:
+            self._ensure_started_locked()
+            need = len(payloads)
+            while (len(self._queue) + need > self.max_queue
+                   and len(self._queue) > 0):
+                if not block:
+                    self.rejected += 1
+                    raise QueueFullError(
+                        f"{self.name}: no room for {need} items "
+                        f"(queue {len(self._queue)}/{self.max_queue})")
+                self._cond.wait()
+            # the wait may have outlived a stop(): re-ensure a live worker
+            self._ensure_started_locked()
+            return [self._enqueue_locked(p) for p in payloads]
+
+    def _enqueue_locked(self, payload: Any) -> WorkItem:
+        item = WorkItem(payload, self)
+        self._queue.append(item)
+        self.submitted += 1
+        self.peak_queue_depth = max(self.peak_queue_depth, len(self._queue))
+        self._cond.notify_all()
+        return item
+
+    def take_ready(self, k: int) -> List[WorkItem]:
+        """Non-blocking pop of up to ``k`` queued items into the RUNNING
+        flush (call only from ``flush_fn``). Enables slot reuse: a decode
+        loop refills freed slots with work that arrived after the flush
+        started, instead of waiting for the next flush boundary.
+        """
+        if k <= 0:
+            return []
+        with self._cond:
+            items = []
+            while self._queue and len(items) < k:
+                items.append(self._queue.popleft())
+            if items:
+                self.mid_flush_admissions += len(items)
+                self._current_extra.extend(items)
+                self._cond.notify_all()   # wake backpressured submitters
+            return items
+
+    # ------------------------------------------------------------ worker
+    def _worker(self) -> None:
+        while True:
+            with self._cond:
+                while self._running and not self._queue:
+                    self._cond.wait()
+                if not self._queue:
+                    if not self._running:
+                        # clear the handle under the SAME lock hold as the
+                        # exit decision, so _ensure_started_locked can never
+                        # see a live-but-doomed worker and skip the restart
+                        self._thread = None
+                        return
+                    continue
+                now = time.perf_counter()
+                oldest_deadline = (self._queue[0].t_enqueue
+                                   + self.max_wait_ms / 1e3)
+                if not self._running:
+                    reason = "drain"
+                elif len(self._queue) >= self.max_batch:
+                    reason = "size"
+                elif now >= oldest_deadline:
+                    reason = "deadline"
+                else:
+                    self._cond.wait(oldest_deadline - now)
+                    continue
+                batch = [self._queue.popleft()
+                         for _ in range(min(self.max_batch,
+                                            len(self._queue)))]
+                self.flushes += 1
+                self.flush_reasons[reason] += 1
+                self.items_flushed += len(batch)
+                self._current_extra = []
+                self._cond.notify_all()   # queue drained: wake submitters
+            try:
+                self.flush_fn(batch)
+                exc: Optional[BaseException] = None
+            except BaseException as e:     # noqa: BLE001 — must not kill the
+                exc = e                    # worker; every waiter gets the exc
+            fallback = exc or RuntimeError(
+                f"{self.name}: flush returned without answering item")
+            for item in batch + self._current_extra:
+                if not item.done:
+                    item.fail(fallback)
+
+    # ------------------------------------------------------------ stats
+    def _record_done(self, item: WorkItem, *, failed: bool) -> None:
+        with self._cond:
+            if failed:
+                self.failed += 1
+            else:
+                self.completed += 1
+            if item.latency_s is not None:
+                self._latencies.append(item.latency_s)
+                self._total_latency_s += item.latency_s
+
+    def queue_depth(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    def stats(self) -> Dict[str, float]:
+        """Snapshot of the scheduling counters (shared engine vocabulary)."""
+        with self._cond:
+            lats = sorted(self._latencies)
+            answered = self.completed + self.failed
+            return {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "rejected": self.rejected,
+                "flushes": self.flushes,
+                "items_flushed": self.items_flushed,
+                "items_per_flush": (self.items_flushed / self.flushes
+                                    if self.flushes else 0.0),
+                "mid_flush_admissions": self.mid_flush_admissions,
+                "flush_size": self.flush_reasons["size"],
+                "flush_deadline": self.flush_reasons["deadline"],
+                "flush_drain": self.flush_reasons["drain"],
+                "queue_depth": len(self._queue),
+                "peak_queue_depth": self.peak_queue_depth,
+                "avg_latency_s": (self._total_latency_s / answered
+                                  if answered else 0.0),
+                "p50_latency_s": percentile(lats, 0.50),
+                "p90_latency_s": percentile(lats, 0.90),
+                "p99_latency_s": percentile(lats, 0.99),
+            }

@@ -1,4 +1,6 @@
 """GraphServeEngine: correctness, batching behavior, cache amortization."""
+import threading
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -251,3 +253,119 @@ def test_block_padding_counters_visible():
 def test_bad_backend_rejected():
     with pytest.raises(ValueError, match="backend must be"):
         GraphServeEngine(backend="segment")
+
+
+# ------------------------------------------------- continuous batching
+def test_submit_future_matches_serve_one():
+    engine, graphs, feats = _setup(n_graphs=1)
+    fut = engine.submit("g0", feats["g0"])
+    out = fut.result(timeout=60)
+    direct = make_accel_spmm(graphs["g0"])(feats["g0"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct),
+                               atol=1e-4, rtol=1e-4)
+    engine.close()
+
+
+def test_submit_validates_synchronously():
+    engine, graphs, _ = _setup(n_graphs=1)
+    with pytest.raises(KeyError, match="not registered"):
+        engine.submit("nope", jnp.zeros((3, 3), jnp.float32))
+    with pytest.raises(ValueError, match="expected"):
+        engine.submit("g0", jnp.zeros((graphs["g0"].n_rows + 1, 4),
+                                      jnp.float32))
+
+
+def test_deadline_flush_fires_for_single_queued_request():
+    """A lone submit() must be answered after ~max_wait_ms, not hang waiting
+    for co-batchable traffic."""
+    engine, graphs, feats = _setup(n_graphs=1, max_wait_ms=20.0)
+    out = engine.submit("g0", feats["g0"]).result(timeout=60)
+    assert out.shape == feats["g0"].shape
+    st = engine.stats()
+    assert st["sched_flush_deadline"] == 1
+    assert st["sched_flush_size"] == 0
+    engine.close()
+
+
+def test_multithreaded_submit_parity_with_serve():
+    """Satellite acceptance: concurrent submit() answers match synchronous
+    serve() — same values, ORIGINAL row order — and cross-caller requests
+    coalesce into shared fused dispatches."""
+    engine, graphs, feats = _setup(n_graphs=3, max_wait_ms=60.0)
+    n_threads, per_thread = 4, 6
+    futs = [[None] * per_thread for _ in range(n_threads)]
+
+    def caller(t):
+        for k in range(per_thread):
+            gid = f"g{(t + k) % len(graphs)}"
+            futs[t][k] = (gid, float(t + 1),
+                          engine.submit(gid, feats[gid] * (t + 1)))
+
+    threads = [threading.Thread(target=caller, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+
+    oracles = {gid: make_accel_spmm(graphs[gid]) for gid in graphs}
+    for t in range(n_threads):
+        for gid, scalef, fut in futs[t]:
+            got = fut.result(timeout=120)
+            want = oracles[gid](feats[gid] * scalef)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=1e-4, rtol=1e-4)
+    st = engine.stats()
+    assert st["requests_served"] == n_threads * per_thread
+    # the whole point: fewer dispatches than requests, multiple graphs per
+    # fused dispatch (concurrent callers shared batches)
+    assert st["batches_dispatched"] < n_threads * per_thread
+    assert st["requests_per_batch"] > 1.0
+    assert st["graphs_per_dispatch"] > 1.0
+    engine.close()
+
+
+def test_sync_serve_coalesces_with_async_submitters():
+    """serve() is a wrapper over the same queue: its requests and a
+    concurrent submit() can share one flush."""
+    engine, graphs, feats = _setup(n_graphs=2, max_wait_ms=25.0)
+    results = {}
+
+    def sync_caller():
+        reqs = [GraphRequest("g0", feats["g0"])]
+        engine.serve(reqs)
+        results["sync"] = reqs[0].out
+
+    def async_caller():
+        results["async"] = engine.submit("g1", feats["g1"]).result(timeout=60)
+
+    ts = [threading.Thread(target=sync_caller),
+          threading.Thread(target=async_caller)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    for gid, key in (("g0", "sync"), ("g1", "async")):
+        want = make_accel_spmm(graphs[gid])(feats[gid])
+        np.testing.assert_allclose(np.asarray(results[key]),
+                                   np.asarray(want), atol=1e-4, rtol=1e-4)
+    engine.close()
+
+
+def test_feature_bucketing_pads_fused_width_only():
+    """Fused same-graph widths round to powers of two for jit reuse; the
+    per-request outputs are still exactly the requested widths."""
+    engine, graphs, feats = _setup(n_graphs=1)  # feature_bucket=True default
+    x = feats["g0"]  # width 16
+    reqs = [GraphRequest("g0", x), GraphRequest("g0", x[:, :5]),
+            GraphRequest("g0", 2.0 * x[:, :7])]   # fused 28 -> padded 32
+    engine.serve(reqs)
+    assert engine.batches_dispatched == 1
+    direct = make_accel_spmm(graphs["g0"])
+    np.testing.assert_allclose(np.asarray(reqs[1].out),
+                               np.asarray(direct(x[:, :5])),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(reqs[2].out),
+                               np.asarray(direct(2.0 * x[:, :7])),
+                               atol=1e-4, rtol=1e-4)
+    assert reqs[1].out.shape[1] == 5 and reqs[2].out.shape[1] == 7

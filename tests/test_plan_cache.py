@@ -134,3 +134,112 @@ def test_plan_roundtrip_without_cache_matches():
     assert p_direct.num_blocks == p_cached.num_blocks
     np.testing.assert_array_equal(np.asarray(p_direct.slabs["colidx"]),
                                   np.asarray(p_cached.slabs["colidx"]))
+
+
+# ---------------------------------------------------------------------------
+# thread safety (the serving schedulers hit the cache from flush threads)
+# ---------------------------------------------------------------------------
+def test_parallel_get_or_build_single_flight():
+    """Satellite acceptance: N threads racing get_or_build of the SAME graph
+    run the partition pipeline exactly once and share one plan object."""
+    import threading
+    cache = PlanCache(capacity=8)
+    g, cfg = _g(21), PartitionConfig()
+    plans = [None] * 8
+    barrier = threading.Barrier(8)
+
+    def worker(i):
+        barrier.wait()
+        plans[i] = cache.get_or_build(g, cfg)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert cache.builds == 1, "parallel misses must coalesce into one build"
+    assert cache.misses == 1 and cache.hits == 7
+    assert all(p is plans[0] for p in plans)
+
+
+def test_parallel_distinct_graphs_build_concurrently():
+    import threading
+    cache = PlanCache(capacity=8)
+    cfg = PartitionConfig()
+    gs = [_g(30 + i) for i in range(4)]
+    threads = [threading.Thread(target=cache.get_or_build, args=(g, cfg))
+               for g in gs for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert cache.builds == 4 and len(cache) == 4
+
+
+# ---------------------------------------------------------------------------
+# disk persistence: spill evicted plans, reload on miss
+# ---------------------------------------------------------------------------
+def test_evicted_plan_spills_and_reloads(tmp_path):
+    cache = PlanCache(capacity=1, save_dir=str(tmp_path))
+    cfg = PartitionConfig()
+    g0, g1 = _g(0), _g(1)
+    p0 = cache.get_or_build(g0, cfg)
+    cache.get_or_build(g1, cfg)          # evicts g0 -> spills to disk
+    st = cache.stats()
+    assert st["evictions"] == 1 and st["spills"] == 1
+    assert len(list(tmp_path.glob("*.npz"))) == 1
+
+    p0b = cache.get_or_build(g0, cfg)    # miss -> disk reload, NOT a rebuild
+    st = cache.stats()
+    assert st["disk_hits"] == 1
+    assert st["builds"] == 2, "disk hit must not re-run the partition"
+    assert p0b.key == p0.key
+    assert p0b.num_blocks == p0.num_blocks
+    for k in ("colidx", "values", "rowloc", "out_row"):
+        np.testing.assert_array_equal(np.asarray(p0b.slabs[k]),
+                                      np.asarray(p0.slabs[k]))
+    np.testing.assert_array_equal(np.asarray(p0b.inv_perm),
+                                  np.asarray(p0.inv_perm))
+    np.testing.assert_array_equal(p0b.partition.meta, p0.partition.meta)
+
+
+def test_reloaded_plan_computes_correctly(tmp_path):
+    import jax.numpy as jnp
+    from repro.kernels.ref import csr_spmm_ref
+    cache = PlanCache(capacity=1, save_dir=str(tmp_path))
+    cfg = PartitionConfig()
+    g = _g(5)
+    cache.get_or_build(g, cfg)
+    cache.get_or_build(_g(6), cfg)       # evict + spill g
+    cache.get_or_build(g, cfg)           # reload from disk
+    op = make_accel_spmm(g, plan_cache=cache)
+    X = jnp.asarray(np.random.default_rng(0).normal(size=(g.n_rows, 12)),
+                    dtype=jnp.float32)
+    ref = np.asarray(csr_spmm_ref(g.rowptr, g.colidx, g.values, X))
+    np.testing.assert_allclose(np.asarray(op(X)), ref, atol=1e-3, rtol=1e-3)
+
+
+def test_corrupt_spill_falls_back_to_rebuild(tmp_path):
+    cache = PlanCache(capacity=1, save_dir=str(tmp_path))
+    cfg = PartitionConfig()
+    g0 = _g(0)
+    cache.get_or_build(g0, cfg)
+    cache.get_or_build(_g(1), cfg)       # evict + spill g0
+    spill = next(tmp_path.glob("*.npz"))
+    spill.write_bytes(b"not a real npz")
+    p = cache.get_or_build(g0, cfg)      # must rebuild, not crash
+    assert p.n_rows == g0.n_rows
+    assert cache.stats()["disk_hits"] == 0
+    assert cache.builds == 3
+
+
+def test_config_tag_distinguishes_spills(tmp_path):
+    cache = PlanCache(capacity=1, save_dir=str(tmp_path))
+    g = _g(3)
+    cache.get_or_build(g, PartitionConfig(mode="tpu"))
+    cache.get_or_build(g, PartitionConfig(mode="tpu", max_block_warps=32))
+    # second build evicted+spilled the first; same graph hash, distinct tag
+    names = {p.name for p in tmp_path.glob("*.npz")}
+    assert len(names) == 1
+    cache.get_or_build(_g(4), PartitionConfig(mode="tpu", max_block_warps=32))
+    assert len(list(tmp_path.glob("*.npz"))) == 2

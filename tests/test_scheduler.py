@@ -1,0 +1,224 @@
+"""BatchScheduler semantics: flush triggers, backpressure, failure scoping."""
+import threading
+import time
+
+import pytest
+
+from repro.serve.scheduler import BatchScheduler, QueueFullError, percentile
+
+
+class Recorder:
+    """flush_fn that completes every item and records the batches."""
+
+    def __init__(self, delay_s=0.0, gate=None):
+        self.batches = []
+        self.delay_s = delay_s
+        self.gate = gate          # optional Event the flush waits on
+        self.entered = threading.Event()  # set when a flush begins
+
+    def __call__(self, items):
+        self.entered.set()
+        if self.gate is not None:
+            assert self.gate.wait(10.0), "test gate never opened"
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        self.batches.append([it.payload for it in items])
+        for it in items:
+            it.complete(("done", it.payload))
+
+
+def test_size_trigger_flushes_full_batches():
+    rec = Recorder()
+    sched = BatchScheduler(rec, max_batch=4, max_wait_ms=10_000, max_queue=64)
+    with sched:
+        items = sched.submit_many(list(range(8)))
+        results = [it.future.result(timeout=10) for it in items]
+    assert results == [("done", i) for i in range(8)]
+    assert [len(b) for b in rec.batches] == [4, 4]
+    st = sched.stats()
+    assert st["flush_size"] == 2 and st["completed"] == 8
+    assert st["items_per_flush"] == 4.0
+
+
+def test_deadline_flush_fires_for_single_request():
+    """A lone queued request must not wait for co-batchable traffic."""
+    rec = Recorder()
+    sched = BatchScheduler(rec, max_batch=64, max_wait_ms=30, max_queue=8)
+    t0 = time.perf_counter()
+    item = sched.submit("solo")
+    assert item.future.result(timeout=10) == ("done", "solo")
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 5.0
+    st = sched.stats()
+    assert st["flush_deadline"] == 1 and st["flush_size"] == 0
+    assert item.latency_s is not None and item.latency_s >= 0.030 * 0.5
+    sched.stop()
+
+
+def test_backpressure_raises_nonblocking_and_times_out():
+    gate = threading.Event()
+    rec = Recorder(gate=gate)
+    sched = BatchScheduler(rec, max_batch=1, max_wait_ms=0, max_queue=2)
+    # first item enters the (gated) flush; once the worker is inside it,
+    # nothing drains the queue, so filling to max_queue is deterministic
+    first = sched.submit("a")
+    assert rec.entered.wait(10.0)
+    while sched.queue_depth() < 2:
+        sched.submit("fill", block=False)
+    with pytest.raises(QueueFullError):
+        sched.submit("overflow", block=False)
+    with pytest.raises(QueueFullError):
+        sched.submit("overflow", timeout=0.05)
+    assert sched.stats()["rejected"] >= 2
+    gate.set()                              # drain; admission works again
+    assert first.future.result(timeout=10) == ("done", "a")
+    ok = sched.submit("after")
+    assert ok.future.result(timeout=10) == ("done", "after")
+    sched.stop()
+
+
+def test_blocking_submit_waits_for_room():
+    gate = threading.Event()
+    rec = Recorder(gate=gate)
+    sched = BatchScheduler(rec, max_batch=1, max_wait_ms=0, max_queue=1)
+    sched.submit("a")
+    assert rec.entered.wait(10.0)   # worker gated: queue can only grow now
+    got = []
+
+    def blocked_submit():
+        got.append(sched.submit("b", block=True, timeout=10))
+
+    while sched.queue_depth() < 1:
+        sched.submit("fill", block=False)
+    t = threading.Thread(target=blocked_submit)
+    t.start()
+    time.sleep(0.05)
+    assert not got, "submit must block while the queue is full"
+    gate.set()
+    t.join(timeout=10)
+    assert got and got[0].future.result(timeout=10)[0] == "done"
+    sched.stop()
+
+
+def test_flush_exception_fails_only_that_flush():
+    calls = []
+
+    def flaky(items):
+        calls.append(len(items))
+        if len(calls) == 1:
+            raise ValueError("boom")
+        for it in items:
+            it.complete("ok")
+
+    sched = BatchScheduler(flaky, max_batch=2, max_wait_ms=1, max_queue=8)
+    bad = sched.submit_many(["x", "y"])
+    for it in bad:
+        with pytest.raises(ValueError, match="boom"):
+            it.future.result(timeout=10)
+    good = sched.submit("z")
+    assert good.future.result(timeout=10) == "ok"
+    st = sched.stats()
+    assert st["failed"] == 2 and st["completed"] == 1
+    sched.stop()
+
+
+def test_unanswered_items_are_failed_not_hung():
+    def forgetful(items):
+        items[0].complete("answered")   # leaves the rest unanswered
+
+    sched = BatchScheduler(forgetful, max_batch=3, max_wait_ms=1, max_queue=8)
+    items = sched.submit_many(["a", "b", "c"])
+    assert items[0].future.result(timeout=10) == "answered"
+    for it in items[1:]:
+        with pytest.raises(RuntimeError, match="without answering"):
+            it.future.result(timeout=10)
+    sched.stop()
+
+
+def test_stop_drains_queue():
+    rec = Recorder()
+    sched = BatchScheduler(rec, max_batch=64, max_wait_ms=60_000, max_queue=64)
+    items = sched.submit_many(list(range(5)))
+    sched.stop(timeout=10)                # deadline far away: drain flushes
+    assert [it.future.result(timeout=1) for it in items] == \
+        [("done", i) for i in range(5)]
+    assert sched.stats()["flush_drain"] >= 1
+
+
+def test_take_ready_pulls_into_running_flush():
+    sched_box = {}
+
+    def reusing(items):
+        for it in items:
+            it.complete("first")
+        time.sleep(0.05)  # let late submits queue up
+        for extra in sched_box["s"].take_ready(8):
+            extra.complete("pulled")
+
+    sched = BatchScheduler(reusing, max_batch=1, max_wait_ms=0, max_queue=8)
+    sched_box["s"] = sched
+    a = sched.submit("a")
+    time.sleep(0.01)
+    late = [sched.submit(f"late{i}") for i in range(3)]
+    assert a.future.result(timeout=10) == "first"
+    results = {it.future.result(timeout=10) for it in late}
+    assert "pulled" in results            # at least one mid-flush admission
+    assert sched.stats()["mid_flush_admissions"] >= 1
+    sched.stop()
+
+
+def test_take_ready_items_fail_with_flush_exception():
+    sched_box = {}
+
+    def pull_then_raise(items):
+        for it in items:
+            it.complete("first")
+        deadline = time.perf_counter() + 5
+        while not sched_box["s"].take_ready(1):
+            if time.perf_counter() > deadline:
+                raise AssertionError("late item never arrived")
+            time.sleep(0.002)
+        raise ValueError("mid-flush boom")
+
+    sched = BatchScheduler(pull_then_raise, max_batch=1, max_wait_ms=0,
+                           max_queue=8)
+    sched_box["s"] = sched
+    a = sched.submit("a")
+    assert a.future.result(timeout=10) == "first"
+    late = sched.submit("late")
+    with pytest.raises(ValueError, match="mid-flush boom"):
+        late.future.result(timeout=10)
+    sched.stop()
+
+
+def test_latency_percentiles_and_validation():
+    assert percentile([], 0.5) == 0.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.5) == 3.0
+    rec = Recorder()
+    sched = BatchScheduler(rec, max_batch=2, max_wait_ms=1, max_queue=8)
+    items = sched.submit_many(list(range(6)))
+    for it in items:
+        it.future.result(timeout=10)
+    st = sched.stats()
+    assert 0 < st["p50_latency_s"] <= st["p90_latency_s"] <= st["p99_latency_s"]
+    assert st["avg_latency_s"] > 0
+    sched.stop()
+    with pytest.raises(ValueError):
+        BatchScheduler(rec, max_batch=0)
+    with pytest.raises(ValueError):
+        BatchScheduler(rec, max_queue=0)
+    with pytest.raises(ValueError):
+        BatchScheduler(rec, max_wait_ms=-1)
+
+
+def test_restart_after_stop():
+    """A stopped scheduler restarts transparently on the next submit —
+    items can never sit in a queue with no worker to drain them."""
+    rec = Recorder()
+    sched = BatchScheduler(rec, max_batch=2, max_wait_ms=1, max_queue=8)
+    a = sched.submit("a")
+    assert a.future.result(timeout=10) == ("done", "a")
+    sched.stop(timeout=10)
+    b = sched.submit("b")
+    assert b.future.result(timeout=10) == ("done", "b")
+    sched.stop(timeout=10)
