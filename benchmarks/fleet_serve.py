@@ -1,0 +1,187 @@
+"""Fleet serving benchmark: multi-device dispatch vs the single-device engine.
+
+Rows emitted:
+  fleet/concurrent_single   the single-device continuous-batching engine on
+                            the concurrent mix (the PR-3 baseline)
+  fleet/concurrent_fleet    the same open-loop traffic through
+                            FleetGraphEngine: per-device dispatch groups
+                            launched concurrently (acceptance: fleet
+                            graphs/round >= single-device graphs/dispatch)
+  fleet/block_shard_giant   one narrow giant graph block-sharded across the
+                            mesh, with per-device live block counts
+                            (acceptance: balanced within 10%)
+
+Results also merge into ``benchmarks/results/serve_stats.json`` under the
+``"fleet"`` key (nightly CI uploads that file as an artifact and asserts
+the acceptance numbers). Run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for real
+multi-device numbers; on one device the section still runs degenerately.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import gcn_normalize
+from repro.data.graphs import make_power_law_graph
+from repro.serve.fleet import FleetGraphEngine
+from repro.serve.graph_engine import GraphServeEngine
+
+from .common import csv_row
+from .serve_graphs import RESULTS_JSON
+
+
+def _traffic(engine, feats, names, n_threads: int, per_thread: int) -> float:
+    futs = []
+    lock = threading.Lock()
+
+    def submitter(t):
+        local = []
+        for k in range(per_thread):
+            gid = names[(t + k) % len(names)]
+            local.append(engine.submit(gid, feats[gid]))
+        with lock:
+            futs.extend(local)
+
+    threads = [threading.Thread(target=submitter, args=(t,))
+               for t in range(n_threads)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    for f in futs:
+        f.result()
+    return time.perf_counter() - t0
+
+
+def _measure(make_engine, graphs, feats, *, n_threads=4, per_thread=12
+             ) -> Dict:
+    """Best-of-3 open-loop concurrent passes (same protocol as the serve
+    section: interpret-mode CPU walls are noisy on shared hosts)."""
+    names = list(graphs)
+    warm = make_engine()
+    _traffic(warm, feats, names, n_threads, per_thread)
+    warm.close()
+    wall, st = None, None
+    for _ in range(3):
+        engine = make_engine()
+        w = _traffic(engine, feats, names, n_threads, per_thread)
+        if wall is None or w < wall:
+            wall, st = w, engine.stats()
+        engine.close()
+    total = n_threads * per_thread
+    rec = {
+        "wall_s": wall,
+        "requests": total,
+        "requests_per_s": total / wall,
+        "batches_dispatched": st["batches_dispatched"],
+        "requests_per_batch": st["requests_per_batch"],
+        "graphs_per_dispatch": st["graphs_per_dispatch"],
+        "p99_latency_s": st["sched_p99_latency_s"],
+    }
+    for k in ("fleet_devices", "fleet_rounds", "fleet_graphs_per_round",
+              "fleet_occupancy", "fleet_device_dispatches",
+              "fleet_device_requests"):
+        if k in st:
+            rec[k] = st[k]
+    return rec
+
+
+def run(budget_edges: int = 200_000, feat: int = 8) -> List[str]:
+    rows: List[str] = []
+    n_dev = len(jax.devices())
+    rng = np.random.default_rng(7)
+
+    # the serve section's dispatch-bound concurrent mix: small recurring
+    # graphs, narrow features
+    graphs = {f"svc{i}": gcn_normalize(make_power_law_graph(
+        220 + 37 * i, 1500 + 100 * i, seed=10 + i)) for i in range(4)}
+    feats = {name: jnp.asarray(rng.normal(size=(g.n_cols, feat)),
+                               jnp.float32) for name, g in graphs.items()}
+    sched_kw = dict(max_batch_requests=16, max_wait_ms=3.0,
+                    max_graphs_per_batch=4, backend="blocked")
+
+    def make_single():
+        e = GraphServeEngine(**sched_kw)
+        for name, g in graphs.items():
+            e.register_graph(name, g)
+        return e
+
+    def make_fleet():
+        e = FleetGraphEngine(**sched_kw)
+        for name, g in graphs.items():
+            e.register_graph(name, g)
+        return e
+
+    results: Dict[str, Dict] = {"devices": n_dev}
+    results["single"] = _measure(make_single, graphs, feats)
+    results["fleet"] = _measure(make_fleet, graphs, feats)
+    rows.append(csv_row(
+        "fleet/concurrent_single", results["single"]["wall_s"] * 1e6,
+        f"req_per_s={results['single']['requests_per_s']:.3g};"
+        f"graphs_per_dispatch={results['single']['graphs_per_dispatch']:.2f}"))
+    gpr = results["fleet"].get("fleet_graphs_per_round", 0.0)
+    rows.append(csv_row(
+        "fleet/concurrent_fleet", results["fleet"]["wall_s"] * 1e6,
+        f"req_per_s={results['fleet']['requests_per_s']:.3g};"
+        f"devices={n_dev};graphs_per_round={gpr:.2f};"
+        f"vs_single_gpd={results['single']['graphs_per_dispatch']:.2f};"
+        f"occupancy={results['fleet'].get('fleet_occupancy', 0.0):.2f}"))
+
+    # narrow giant graph: block-sharded across the mesh
+    n_big = max(5000, min(9000, budget_edges // 4))
+    big = gcn_normalize(make_power_law_graph(n_big, budget_edges // 3,
+                                             seed=99))
+    fleet = FleetGraphEngine(backend="blocked")
+    plan = fleet.register_graph("big", big)
+    xb = jnp.asarray(rng.normal(size=(big.n_cols, 16)), jnp.float32)
+    fleet.serve_one("big", xb)              # warm
+    t0 = time.perf_counter()
+    fleet.serve_one("big", xb)
+    dt = time.perf_counter() - t0
+    st = fleet.stats()
+    fleet.close()
+    counts = st["fleet_block_counts"]
+    balance = st["fleet_block_balance"]
+    results["giant"] = {
+        "n_rows": big.n_rows, "nnz": big.nnz,
+        "num_blocks": plan.num_blocks,
+        "block_sharded_dispatches": st["fleet_block_sharded"],
+        "block_counts": counts, "block_balance": balance,
+    }
+    rows.append(csv_row(
+        "fleet/block_shard_giant", dt * 1e6,
+        f"n={big.n_rows};blocks={plan.num_blocks};devices={n_dev};"
+        f"balance={balance:.3f};counts={'|'.join(map(str, counts))}"))
+
+    # merge into the serve stats artifact (the serve section owns the file;
+    # running fleet alone still produces a valid JSON)
+    merged = {}
+    if os.path.exists(RESULTS_JSON):
+        try:
+            with open(RESULTS_JSON) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged["fleet"] = results
+    os.makedirs(os.path.dirname(RESULTS_JSON), exist_ok=True)
+    with open(RESULTS_JSON, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+    rows.append(csv_row(
+        "fleet/stats_json", 0.0,
+        f"devices={n_dev};json={os.path.relpath(RESULTS_JSON)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in run():
+        print(r)

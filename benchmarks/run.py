@@ -12,6 +12,11 @@ Emits ``name,us_per_call,derived`` CSV. Sections:
   routing   resident vs windowed vs HBM-gather vs auto at the VMEM
             boundaries (mixes that straddle the routing thresholds), and
             the resident kernel's block_major vs ft_major grid orders
+  fleet     multi-device serving: FleetGraphEngine vs the single-device
+            scheduler on the concurrent mix, plus the block-sharded giant
+            graph with per-device balance (merges a "fleet" key into
+            benchmarks/results/serve_stats.json; run with
+            XLA_FLAGS=--xla_force_host_platform_device_count=8)
   moe       beyond-paper: block dispatch for MoE
   roofline  summary rows from the dry-run results (if present)
 """
@@ -56,12 +61,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6,table2,preproc,serve,"
-                         "routing,moe,roofline")
+                         "routing,fleet,moe,roofline")
     ap.add_argument("--budget-edges", type=int, default=200_000)
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else \
-        {"fig5", "fig6", "table2", "preproc", "serve", "routing", "moe",
-         "roofline"}
+        {"fig5", "fig6", "table2", "preproc", "serve", "routing", "fleet",
+         "moe", "roofline"}
 
     print("name,us_per_call,derived")
     if "fig5" in want:
@@ -87,6 +92,10 @@ def main() -> None:
     if "routing" in want:
         from .spmm_routing import run as routing
         for r in routing(budget_edges=args.budget_edges):
+            print(r)
+    if "fleet" in want:
+        from .fleet_serve import run as fleet
+        for r in fleet(budget_edges=args.budget_edges):
             print(r)
     if "moe" in want:
         from .moe_dispatch import run as moe

@@ -188,6 +188,8 @@ class PlanCache:
             OrderedDict()
         self._lock = threading.RLock()
         self._inflight: Dict[Tuple[str, PartitionConfig], threading.Event] = {}
+        self.lookups = 0        # == hits + misses, bumped under the SAME
+        #                         lock hold (the stats-atomicity witness)
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -220,6 +222,7 @@ class PlanCache:
                 plan = self._plans.get(key)
                 if plan is not None:
                     self.hits += 1
+                    self.lookups += 1
                     self._plans.move_to_end(key)
                     return plan
                 pending = self._inflight.get(key)
@@ -227,6 +230,7 @@ class PlanCache:
                     event = threading.Event()
                     self._inflight[key] = event
                     self.misses += 1
+                    self.lookups += 1
             if pending is not None:
                 pending.wait()      # another thread is building this key;
                 continue            # loop back — next pass is a hit
@@ -380,11 +384,20 @@ class PlanCache:
             return None         # KeyError, OSError, ...): rebuild instead
 
     def stats(self) -> Dict[str, float]:
+        """ATOMIC snapshot of every counter, taken under one lock hold.
+
+        Guarantee: all values in one returned dict are from the same
+        instant — a flush thread mutating counters mid-``stats()`` can
+        never produce a torn read (e.g. ``hits + misses != lookups``, or a
+        ``hit_rate`` computed from two different moments). The benchmark
+        samplers and the fleet cache's per-shard aggregation rely on this.
+        """
         with self._lock:
             total = self.hits + self.misses
             return {
                 "size": len(self._plans),
                 "capacity": self.capacity,
+                "lookups": self.lookups,
                 "hits": self.hits,
                 "misses": self.misses,
                 "builds": self.builds,

@@ -1,0 +1,31 @@
+"""Fleet execution: sharded SpMM dispatch + device-partitioned plan cache.
+
+Three layers (ISSUE 4 / ROADMAP "shard hot plans across devices"):
+
+* :mod:`repro.distributed.shard_spmm` — ``shard_map``-based SpMM over
+  :func:`repro.launch.mesh.graph_mesh`: feature sharding (zero-comm column
+  split) and block sharding (round-robin blocks, psum partials);
+* :mod:`repro.distributed.placement` — :class:`FleetPlanCache`, per-device
+  ``PlanCache`` shards behind consistent-hash + load-aware placement;
+* :mod:`repro.serve.fleet` — ``FleetGraphEngine``, the continuous-batching
+  engine whose flush groups work by owning device and launches per-device
+  dispatches concurrently.
+"""
+from .placement import ConsistentHashRing, FleetPlanCache
+from .shard_spmm import (
+    prepare_block_shards,
+    prepare_feature_shards,
+    round_robin_block_order,
+    spmm_block_sharded,
+    spmm_feature_sharded,
+)
+
+__all__ = [
+    "ConsistentHashRing",
+    "FleetPlanCache",
+    "prepare_block_shards",
+    "prepare_feature_shards",
+    "round_robin_block_order",
+    "spmm_block_sharded",
+    "spmm_feature_sharded",
+]

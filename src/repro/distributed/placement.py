@@ -1,0 +1,238 @@
+"""Device-partitioned plan cache: each partition plan resident on ONE device.
+
+A single host's :class:`~repro.core.plan_cache.PlanCache` caps the serving
+working set at what one device's HBM holds. :class:`FleetPlanCache` wraps a
+per-device shard of ``PlanCache`` behind a placement policy so the fleet's
+aggregate plan capacity grows with device count:
+
+* **consistent-hash placement** — a graph's content hash lands on a hash
+  ring (:class:`ConsistentHashRing`, virtual nodes per device), so the same
+  graph always lands on the same device across processes and restarts, and
+  resizing the fleet remaps only ~1/d of the keys;
+* **load-aware override** — when the ring's choice is already far fuller
+  than the emptiest shard (more than ``load_spread`` plans apart), the plan
+  goes to the least-loaded shard instead. Placements are sticky: once a key
+  is placed, later lookups go to the recorded shard, so the override never
+  strands a cached plan.
+
+Staging: the owning shard's plans have their device arrays ``device_put``
+onto the owning device, so a fleet dispatch reads slabs from local memory —
+the plan is *resident on exactly one device*, which is the whole point.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from ..core.graph import CSRGraph
+from ..core.plan_cache import (
+    PartitionConfig, PartitionPlan, PlanCache, graph_content_hash,
+    build_partition_plan,
+)
+
+__all__ = ["ConsistentHashRing", "FleetPlanCache"]
+
+
+class ConsistentHashRing:
+    """Classic consistent-hash ring over integer member ids.
+
+    ``vnodes`` virtual points per member smooth the arc lengths; lookup is
+    a bisect over the sorted point list. Members are the fleet's device
+    indices — adding/removing a device moves only the keys on its arcs.
+    """
+
+    def __init__(self, members: Sequence[int], vnodes: int = 64):
+        if not members:
+            raise ValueError("hash ring needs >= 1 member")
+        self.vnodes = vnodes
+        self._points: List[Tuple[int, int]] = []
+        for m in members:
+            for v in range(vnodes):
+                h = hashlib.blake2b(f"dev{m}#v{v}".encode(),
+                                    digest_size=8).digest()
+                self._points.append((int.from_bytes(h, "big"), int(m)))
+        self._points.sort()
+        self._keys = [p[0] for p in self._points]
+
+    def lookup(self, key: str) -> int:
+        """Member owning ``key`` (first ring point clockwise of its hash)."""
+        h = int.from_bytes(
+            hashlib.blake2b(key.encode(), digest_size=8).digest(), "big")
+        i = bisect.bisect_right(self._keys, h) % len(self._points)
+        return self._points[i][1]
+
+
+class FleetPlanCache:
+    """Per-device :class:`PlanCache` shards behind one placement policy.
+
+    Drop-in for the single ``PlanCache`` where the serving engine is
+    concerned (``get_or_build`` / ``get_by_key`` / ``stats`` / ``builds``…),
+    plus :meth:`device_index_of` so the fleet engine can group dispatches
+    by owning device. ``capacity_per_device`` bounds each shard, so total
+    fleet capacity is ``capacity_per_device * len(devices)``.
+    """
+
+    def __init__(self, devices: Optional[Sequence] = None, *,
+                 capacity_per_device: int = 32,
+                 load_spread: int = 4,
+                 vnodes: int = 64,
+                 save_dir: Optional[str] = None):
+        self.devices = list(devices if devices is not None else jax.devices())
+        if not self.devices:
+            raise ValueError("FleetPlanCache needs >= 1 device")
+        self.capacity_per_device = capacity_per_device
+        self.load_spread = load_spread
+        # shards share one spill dir: spill names are content-hashed, so a
+        # plan evicted from shard 3 can be reloaded by any shard later
+        self.shards: List[PlanCache] = [
+            PlanCache(capacity_per_device, save_dir=save_dir)
+            for _ in self.devices]
+        self.ring = ConsistentHashRing(range(len(self.devices)), vnodes)
+        self._lock = threading.Lock()
+        self._placements: Dict[Tuple[str, PartitionConfig], int] = {}
+        # keys whose build is in flight (placed, not yet inserted into the
+        # owning shard): exempt from placement pruning, refcounted because
+        # several threads can be waiting on one single-flight build
+        self._building: Dict[Tuple[str, PartitionConfig], int] = {}
+        self.placement_overrides = 0   # load-aware departures from the ring
+
+    # ------------------------------------------------------------- placement
+    def device_index_of(self, key: Tuple[str, PartitionConfig]) -> int:
+        """Owning device index of ``key`` (placing it if never seen)."""
+        with self._lock:
+            return self._place_locked(key)
+
+    def _place_locked(self, key: Tuple[str, PartitionConfig]) -> int:
+        dev = self._placements.get(key)
+        if dev is not None:
+            return dev
+        dev = self.ring.lookup(key[0])
+        sizes = [len(s) for s in self.shards]
+        least = min(range(len(sizes)), key=sizes.__getitem__)
+        if sizes[dev] - sizes[least] > self.load_spread:
+            dev = least
+            self.placement_overrides += 1
+        self._placements[key] = dev
+        # stickiness only matters while the plan is resident: once the
+        # placement map outgrows the fleet's live capacity, drop entries
+        # whose plan the owning shard has since evicted. A later lookup
+        # re-places them with CURRENT load data (and this bounds the map
+        # under one-off-graph churn instead of leaking per distinct graph).
+        cap = 2 * self.capacity_per_device * len(self.shards)
+        if len(self._placements) > cap:
+            # exempt the key just placed and every in-flight build: their
+            # plans have not been inserted into the owning shard yet, and a
+            # pruned-mid-build placement would re-place later (possibly on
+            # another shard) leaving a duplicate resident copy
+            self._placements = {
+                k: d for k, d in self._placements.items()
+                if k == key or k in self._building or k in self.shards[d]}
+        return dev
+
+    # --------------------------------------------------------------- lookups
+    def get_or_build(self, g: CSRGraph, cfg: PartitionConfig) -> PartitionPlan:
+        key = (graph_content_hash(g), cfg)
+        return self.get_by_key(
+            key, lambda: build_partition_plan(g, cfg, graph_hash=key[0]))
+
+    def get_by_key(self, key: Tuple[str, PartitionConfig],
+                   build_fn: Callable[[], PartitionPlan]) -> PartitionPlan:
+        # place AND register the in-flight build in ONE lock hold: a prune
+        # racing between the two could otherwise drop the fresh placement
+        # (key not yet in _building nor in any shard) and let a later
+        # lookup re-place the key while the first copy builds — two
+        # resident copies of one plan
+        with self._lock:
+            dev_idx = self._place_locked(key)
+            self._building[key] = self._building.get(key, 0) + 1
+        device = self.devices[dev_idx]
+        try:
+            plan = self.shards[dev_idx].get_by_key(key, build_fn)
+        finally:
+            with self._lock:
+                n = self._building.get(key, 1) - 1
+                if n <= 0:
+                    self._building.pop(key, None)
+                else:
+                    self._building[key] = n
+        return self._ensure_staged(plan, device)
+
+    def lookup(self, key: Tuple[str, PartitionConfig]) -> Optional[PartitionPlan]:
+        with self._lock:
+            dev_idx = self._placements.get(key)
+        if dev_idx is None:
+            return None
+        return self.shards[dev_idx].lookup(key)
+
+    @staticmethod
+    def _ensure_staged(plan: PartitionPlan, device) -> PartitionPlan:
+        """Commit the plan's device arrays to the owning device (idempotent).
+
+        Mutates the shared plan object in place: the staged arrays replace
+        the unstaged ones for every holder, and re-staging an already-local
+        array is a no-op transfer. Races between threads write equivalent
+        values, so no lock is needed.
+        """
+        probe = plan.slabs["colidx"]
+        if getattr(probe, "devices", lambda: None)() == {device}:
+            return plan
+        plan.slabs = {
+            k: (jax.device_put(v, device) if hasattr(v, "shape") else v)
+            for k, v in plan.slabs.items()}
+        plan.inv_perm = jax.device_put(plan.inv_perm, device)
+        return plan
+
+    # ----------------------------------------------------------------- admin
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.shards)
+
+    def __contains__(self, key) -> bool:
+        return any(key in s for s in self.shards)
+
+    def clear(self) -> None:
+        for s in self.shards:
+            s.clear()
+        with self._lock:
+            self._placements.clear()
+
+    def keys(self):
+        out = []
+        for s in self.shards:
+            out.extend(s.keys())
+        return out
+
+    # aggregate counters, mirroring the PlanCache attribute API the tests
+    # and engine use (reads are sums over shard snapshots)
+    @property
+    def builds(self) -> int:
+        return sum(s.stats()["builds"] for s in self.shards)
+
+    @property
+    def hits(self) -> int:
+        return sum(s.stats()["hits"] for s in self.shards)
+
+    @property
+    def misses(self) -> int:
+        return sum(s.stats()["misses"] for s in self.shards)
+
+    def stats(self) -> Dict[str, float]:
+        """Aggregate counters + per-shard occupancy (for balance stats)."""
+        per = [s.stats() for s in self.shards]
+        agg: Dict[str, float] = {}
+        for k in ("size", "lookups", "hits", "misses", "builds", "evictions",
+                  "spills", "disk_hits", "device_bytes"):
+            agg[k] = sum(p[k] for p in per)
+        total = agg["hits"] + agg["misses"]
+        agg["capacity"] = self.capacity_per_device * len(self.shards)
+        agg["hit_rate"] = agg["hits"] / total if total else 0.0
+        agg["devices"] = len(self.devices)
+        agg["shard_sizes"] = [p["size"] for p in per]
+        agg["shard_bytes"] = [p["device_bytes"] for p in per]
+        with self._lock:
+            agg["placements"] = len(self._placements)
+            agg["placement_overrides"] = self.placement_overrides
+        return agg

@@ -44,6 +44,8 @@ __all__ = [
     "estimate_vmem_bytes",
     "route_spmm",
     "assert_resident_fits",
+    "FleetDecision",
+    "route_fleet",
 ]
 
 # TPU cores expose ~16 MiB of VMEM. Mosaic double-buffers every streamed
@@ -252,6 +254,94 @@ def route_spmm(n_x_rows: int, n_features: int, C: int, R: int,
         f"HBM (one-hot [R, C] and gathered [C, {f_tile}] MXU operands are "
         f"regime-independent); repartition with a smaller "
         f"max_block_warps x max_warp_nzs.")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetDecision:
+    """One dispatch's *fleet* routing outcome: how many devices it spans and
+    how each device's share executes.
+
+    ``per_device`` is the :class:`RoutingDecision` for ONE device's slice of
+    the work (the whole dispatch for ``strategy="single"``); ``single`` is
+    what one device alone would have run — keeping both makes the win
+    legible in logs ("windowed alone, resident per-device once feature-
+    sharded 8 ways").
+    """
+
+    strategy: str             # "single" | "feature" | "block"
+    n_devices: int            # devices the dispatch spans (1 for single)
+    per_device: RoutingDecision
+    single: RoutingDecision
+    num_blocks: int
+    reason: str
+
+    def describe(self) -> str:
+        return (f"{self.strategy}x{self.n_devices}: "
+                f"per-device {self.per_device.backend} ({self.reason})")
+
+
+def route_fleet(n_x_rows: int, n_features: int, C: int, R: int,
+                num_blocks: int, n_devices: int,
+                *, f_tile: int = 128, itemsize: int = 4,
+                min_blocks_per_device: int = 4) -> FleetDecision:
+    """Pick single-device vs feature-sharded vs block-sharded execution.
+
+    The fleet's aggregate VMEM/HBM budget is the single-device budget times
+    the device count, and the two sharding strategies spend it differently:
+
+    * **feature** — the paper's column-dimension parallelism at device
+      granularity: each device owns ``F_pad / n_devices`` feature columns
+      and runs the FULL block schedule on them. Zero cross-device
+      communication; per-device grid steps (and the per-device slice of X)
+      shrink by the device count. Chosen whenever the padded feature width
+      carries at least one full ``f_tile`` per device — otherwise some
+      devices would idle.
+    * **block** — for one giant graph with narrow features — "giant"
+      meaning the single-device VMEM estimate already demoted it off the
+      resident regime: the partition's blocks go round-robin across devices
+      (degree-sorted emission order means heavy blocks interleave, the
+      AWB-GCN balancing argument), X is replicated/all-gathered, and
+      per-device partial row results psum back. Needs enough blocks
+      (``min_blocks_per_device`` per device) to be worth the collective.
+    * **single** — everything else: a dispatch that fits one device's VMEM
+      budget as a resident tile with narrow features gains nothing from the
+      mesh; splitting it would trade zero VMEM pressure for collective and
+      launch overhead.
+
+    The per-device regime (resident / windowed / hbm) is still
+    :func:`route_spmm` on the per-device share — feature sharding does not
+    change the X *row* count, so a dispatch that is windowed alone stays
+    windowed per device, just with 1/n-th of the feature sweeps.
+    """
+    single = route_spmm(n_x_rows, n_features, C, R,
+                        f_tile=f_tile, itemsize=itemsize)
+    if n_devices <= 1:
+        return FleetDecision("single", 1, single, single, num_blocks,
+                             "one device")
+    f_pad = pad_features(n_features, f_tile)
+    f_tiles = f_pad // f_tile
+    if f_tiles >= n_devices:
+        per = route_spmm(n_x_rows, f_pad // n_devices, C, R,
+                         f_tile=f_tile, itemsize=itemsize)
+        return FleetDecision(
+            "feature", n_devices, per, single, num_blocks,
+            f"{f_tiles} feature tiles over {n_devices} devices: "
+            f"zero-communication column split, per-device F="
+            f"{f_pad // n_devices}")
+    if (single.backend != "resident"
+            and num_blocks >= min_blocks_per_device * n_devices):
+        # per-step footprint is block-count-independent: one device's share
+        # routes exactly like the whole dispatch, with B/n grid steps
+        return FleetDecision(
+            "block", n_devices, single, single, num_blocks,
+            f"single-device estimate demotes to {single.backend} and "
+            f"features are narrow ({f_tiles} tile(s) < {n_devices} "
+            f"devices): {num_blocks} blocks round-robin, X replicated, "
+            f"partials psum")
+    return FleetDecision(
+        "single", 1, single, single, num_blocks,
+        f"{single.backend} on one device ({f_tiles} feature tile(s), "
+        f"{num_blocks} block(s)): sharding would cost more than it saves")
 
 
 def assert_resident_fits(n_x_rows: int, n_features: int, C: int, R: int,

@@ -6,7 +6,11 @@ axis for hierarchical (ICI-within-pod / DCN-across-pod) collectives.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,5 +22,31 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU smoke)."""
     n = len(jax.devices())
-    assert n % model == 0
+    if model < 1:
+        raise ValueError(f"model axis size must be >= 1, got {model}")
+    if n % model != 0:
+        raise ValueError(
+            f"cannot build a ({n // model if model else 0}, {model}) host "
+            f"mesh: {n} available device(s) not divisible by model={model}")
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def graph_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D mesh for fleet graph serving: ``n_devices`` devices on axis "dev".
+
+    Unlike the train meshes there is no data/model split — graph serving
+    parallelism is the paper's column-dimension (feature) parallelism and
+    block-level workload balancing lifted to device granularity, both of
+    which want a flat device axis. Defaults to every visible device; a
+    smaller ``n_devices`` takes a prefix (so a fleet engine can leave
+    devices for other tenants).
+    """
+    avail = jax.devices()
+    n = len(avail) if n_devices is None else int(n_devices)
+    if n < 1:
+        raise ValueError(f"graph_mesh needs >= 1 device, got n_devices={n}")
+    if n > len(avail):
+        raise ValueError(
+            f"graph_mesh(n_devices={n}) exceeds the {len(avail)} visible "
+            f"device(s)")
+    return Mesh(np.asarray(avail[:n]), ("dev",))

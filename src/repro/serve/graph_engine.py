@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import threading
 import time
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -134,7 +135,11 @@ class GraphServeEngine:
             max_queue=max_pending,
             name="graph-serve",
         )
-        # serving counters (mutated only on the scheduler's flush thread)
+        # serving counters. The base engine mutates them only on the
+        # scheduler's flush thread; the fleet subclass dispatches from a
+        # device pool, so every counter update takes this (uncontended in
+        # the single-device case) lock.
+        self._counters_lock = threading.Lock()
         self.requests_served = 0
         self.batches_dispatched = 0
         self.graphs_dispatched = 0   # distinct graphs summed over dispatches
@@ -241,14 +246,11 @@ class GraphServeEngine:
         return list(requests)
 
     # ------------------------------------------------------------------ flush
-    def _flush(self, items: List[WorkItem]) -> None:
-        """Scheduler flush callback: group by plan, fuse, dispatch in chunks.
-
-        Runs on the scheduler thread. Requests naming the same graph fuse
-        along the feature axis (one slab gather serves all of them);
-        distinct graphs chunk into fused dispatches of up to
-        ``max_graphs_per_batch`` in order of first appearance.
-        """
+    @staticmethod
+    def _group_by_graph(items: List[WorkItem]
+                        ) -> Tuple[List[str], Dict[str, List[WorkItem]]]:
+        """Group a flush's items by graph id, in order of first appearance
+        (shared with the fleet engine's flush)."""
         order: List[str] = []
         groups: Dict[str, List[WorkItem]] = {}
         for item in items:
@@ -257,6 +259,17 @@ class GraphServeEngine:
                 groups[gid] = []
                 order.append(gid)
             groups[gid].append(item)
+        return order, groups
+
+    def _flush(self, items: List[WorkItem]) -> None:
+        """Scheduler flush callback: group by plan, fuse, dispatch in chunks.
+
+        Runs on the scheduler thread. Requests naming the same graph fuse
+        along the feature axis (one slab gather serves all of them);
+        distinct graphs chunk into fused dispatches of up to
+        ``max_graphs_per_batch`` in order of first appearance.
+        """
+        order, groups = self._group_by_graph(items)
         plans = {gid: self.plan_for(gid) for gid in order}
 
         # a raising dispatch aborts the remaining chunks: their items are
@@ -299,10 +312,11 @@ class GraphServeEngine:
         dt = time.perf_counter() - t0         # this dispatch's kernel time
 
         executed = decision.backend if decision is not None else "blocked"
-        self.backend_dispatches[executed] += 1
-        self.last_decision = decision
-        self.live_blocks += b_total
-        self.padded_blocks += pad_to if pad_to else b_total
+        with self._counters_lock:
+            self.backend_dispatches[executed] += 1
+            self.last_decision = decision
+            self.live_blocks += b_total
+            self.padded_blocks += pad_to if pad_to else b_total
         if logger.isEnabledFor(logging.DEBUG):
             logger.debug(
                 "dispatch: graphs=%d blocks=%d->%d backend=%s (%s) %.1fms",
@@ -314,19 +328,28 @@ class GraphServeEngine:
         # stats() immediately
         now = time.perf_counter()
         answers: List[Tuple[WorkItem, jax.Array]] = []
+        n_req = n_rows = n_vals = 0
+        wait_s = 0.0
         for (gid, grp, plan), out, widths in zip(batch, outs, col_splits):
             out = out[plan.inv_perm]          # back to original row order
             col = 0
             for item, w in zip(grp, widths):
                 answers.append((item, out[:, col:col + w]))
                 col += w
-                self.requests_served += 1
-                self.rows_served += plan.n_rows
-                self.values_served += plan.n_rows * w
-                self.total_request_latency_s += now - item.t_enqueue
-        self.batches_dispatched += 1
-        self.graphs_dispatched += len(batch)
-        self.total_serve_s += dt
+                n_req += 1
+                n_rows += plan.n_rows
+                n_vals += plan.n_rows * w
+                wait_s += now - item.t_enqueue
+        # only the increments sit under the lock (concurrent fleet device
+        # launches must not serialize their un-permute/slice work on it)
+        with self._counters_lock:
+            self.requests_served += n_req
+            self.rows_served += n_rows
+            self.values_served += n_vals
+            self.total_request_latency_s += wait_s
+            self.batches_dispatched += 1
+            self.graphs_dispatched += len(batch)
+            self.total_serve_s += dt
         for item, result in answers:
             item.complete(result)
 
@@ -335,6 +358,13 @@ class GraphServeEngine:
         s = {f"cache_{k}": v for k, v in self.cache.stats().items()}
         s.update({f"sched_{k}": v
                   for k, v in self.scheduler.stats().items()})
+        # engine counters are one atomic snapshot (same guarantee as
+        # PlanCache.stats()); cache/scheduler snapshots above are each
+        # internally consistent but taken a moment earlier
+        with self._counters_lock:
+            return self._stats_locked(s)
+
+    def _stats_locked(self, s: Dict[str, float]) -> Dict[str, float]:
         s.update(
             registered_graphs=len(self._graphs),
             requests_served=self.requests_served,
@@ -368,3 +398,4 @@ class GraphServeEngine:
                 if self.requests_served else 0.0),
         )
         return s
+

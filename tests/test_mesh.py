@@ -1,0 +1,42 @@
+"""launch/mesh: host-mesh validation errors + the fleet graph mesh."""
+import jax
+import pytest
+
+from repro.launch.mesh import graph_mesh, make_host_mesh
+
+
+def test_make_host_mesh_default():
+    mesh = make_host_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.size == len(jax.devices())
+
+
+def test_make_host_mesh_indivisible_raises_value_error():
+    n = len(jax.devices())
+    bad = n + 1   # never divides n (n >= 1)
+    with pytest.raises(ValueError) as ei:
+        make_host_mesh(model=bad)
+    msg = str(ei.value)
+    assert str(n) in msg and f"model={bad}" in msg, \
+        "error must carry the device/model counts"
+
+
+def test_make_host_mesh_nonpositive_model_raises():
+    with pytest.raises(ValueError):
+        make_host_mesh(model=0)
+
+
+def test_graph_mesh_default_spans_all_devices():
+    mesh = graph_mesh()
+    assert mesh.axis_names == ("dev",)
+    assert mesh.devices.size == len(jax.devices())
+
+
+def test_graph_mesh_prefix_and_bounds():
+    mesh = graph_mesh(1)
+    assert mesh.devices.size == 1
+    assert mesh.devices.flat[0] == jax.devices()[0]
+    with pytest.raises(ValueError):
+        graph_mesh(0)
+    with pytest.raises(ValueError):
+        graph_mesh(len(jax.devices()) + 1)

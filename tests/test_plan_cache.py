@@ -243,3 +243,53 @@ def test_config_tag_distinguishes_spills(tmp_path):
     assert len(names) == 1
     cache.get_or_build(_g(4), PartitionConfig(mode="tpu", max_block_warps=32))
     assert len(list(tmp_path.glob("*.npz"))) == 2
+
+
+# ---------------------------------------------------------------------------
+# stats atomicity
+# ---------------------------------------------------------------------------
+def test_stats_snapshot_atomic_under_hammering_thread():
+    """Regression: ``stats()`` is one consistent snapshot taken under the
+    cache lock. ``lookups`` is bumped in the SAME lock hold as ``hits`` /
+    ``misses``, so any torn read (counters sampled at two different moments
+    while a flush thread mutates them) would show up as
+    ``hits + misses != lookups`` or an out-of-range derived value."""
+    import threading
+
+    cfg = PartitionConfig()
+    cache = PlanCache(capacity=4)
+    graphs = [_g(200 + i, n=60) for i in range(8)]  # > capacity: evictions too
+    stop = threading.Event()
+    errors = []
+
+    def hammer(tid):
+        k = 0
+        while not stop.is_set():
+            cache.get_or_build(graphs[(tid + k) % len(graphs)], cfg)
+            k += 1
+
+    def sampler():
+        while not stop.is_set():
+            s = cache.stats()
+            try:
+                assert s["hits"] + s["misses"] == s["lookups"], s
+                assert 0.0 <= s["hit_rate"] <= 1.0
+                assert s["size"] <= s["capacity"]
+                assert s["builds"] + s["disk_hits"] <= s["misses"]
+            except AssertionError as e:
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(3)]
+    threads += [threading.Thread(target=sampler) for _ in range(2)]
+    for t in threads:
+        t.start()
+    import time
+    time.sleep(1.5)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, f"torn stats snapshot observed: {errors[0]}"
+    # quiesced: the invariant holds exactly
+    s = cache.stats()
+    assert s["hits"] + s["misses"] == s["lookups"]
