@@ -1,0 +1,162 @@
+"""Cross-host fleet benchmark: two REAL JAX processes, directory-routed.
+
+Spawns a two-subprocess CPU fleet (4 fake devices per host, the CI smoke
+topology) via :func:`repro.distributed.multihost.run_cpu_fleet` and
+measures the serving paths the multihost engine adds:
+
+  multihost/two_host_serve    rank 0 submits open-loop traffic for every
+                              registered graph; remote-owned groups
+                              forward to rank 1 over the data plane
+                              (acceptance: the directory spreads plans —
+                              each host owns >= 1 — and forwarding
+                              actually happened)
+  multihost/global_giant      both ranks enter the COLLECTIVE global-mesh
+                              dispatch of one giant graph (blocks
+                              round-robin over all 8 global devices,
+                              cross-host psum)
+
+Results merge into ``benchmarks/results/serve_stats.json`` under the
+``"multihost"`` key; nightly CI asserts the placement spread.
+"""
+from __future__ import annotations
+
+import json
+import os
+import textwrap
+from typing import Dict, List
+
+from .common import csv_row
+from .serve_graphs import RESULTS_JSON
+
+_WORKER = textwrap.dedent("""
+    import json, os, sys, threading, time
+    sys.path.insert(0, "src")
+    import numpy as np
+    from repro.distributed.multihost import initialize_multihost
+    ctx = initialize_multihost()
+    import jax, jax.numpy as jnp
+    from jax.experimental import multihost_utils
+    from repro.core.graph import gcn_normalize
+    from repro.data.graphs import make_power_law_graph
+    from repro.serve.fleet import MultihostGraphEngine
+    from repro.serve.graph_engine import GraphRequest
+
+    budget_edges = int(os.environ.get("REPRO_MH_BENCH_BUDGET", "40000"))
+    engine = MultihostGraphEngine(context=ctx, backend="blocked",
+                                  max_graphs_per_batch=4,
+                                  max_batch_requests=16, max_wait_ms=3.0)
+    served_evt = threading.Event()
+    engine.server.register("phase-served", lambda _p: served_evt.set())
+    engine.connect_peers()
+
+    rng = np.random.default_rng(7)
+    graphs, feats, owned = {}, {}, 0
+    for i in range(6):
+        gid = f"svc{i}"
+        g = gcn_normalize(make_power_law_graph(
+            200 + 31 * i, min(1400 + 90 * i, budget_edges // 6), seed=i))
+        graphs[gid] = g
+        owned += int(engine.register_graph(gid, g) is not None)
+        feats[gid] = jnp.asarray(rng.normal(size=(g.n_cols, 8)), jnp.float32)
+    multihost_utils.sync_global_devices("registered")
+
+    serve_wall = 0.0
+    if ctx.process_index == 0:
+        reqs = [GraphRequest(g, feats[g]) for g in graphs] * 4
+        engine.serve(reqs[:len(graphs)])          # warm both hosts
+        t0 = time.perf_counter()
+        engine.serve(reqs)
+        serve_wall = time.perf_counter() - t0
+        engine.peers[1].request("phase-served", None)
+    else:
+        assert served_evt.wait(300)
+
+    # collective giant across the global mesh
+    n_big = max(4000, min(8000, budget_edges // 5))
+    big = gcn_normalize(make_power_law_graph(n_big, budget_edges, seed=99))
+    engine.register_graph("big", big)
+    xb = jnp.asarray(rng.normal(size=(big.n_cols, 16)), jnp.float32)
+    engine.serve_global("big", xb)                # warm (compile + prep)
+    t0 = time.perf_counter()
+    out = engine.serve_global("big", xb)
+    giant_wall = time.perf_counter() - t0
+    multihost_utils.sync_global_devices("done")
+
+    st = engine.stats()
+    engine.close()
+    print(json.dumps({
+        "rank": ctx.process_index,
+        "owned_plans": owned,
+        "serve_wall_s": serve_wall,
+        "giant_wall_s": giant_wall,
+        "requests_served": st["requests_served"],
+        "forwarded": st["fleet_forwarded"],
+        "remote_served": st["fleet_remote_served"],
+        "host_placements": st["fleet_dir_host_placements"],
+        "global_dispatches": st["fleet_global_dispatches"],
+        "block_counts": st["fleet_block_counts"],
+        "failovers": st["fleet_host_failovers"],
+    }))
+""")
+
+
+def run(budget_edges: int = 200_000, num_processes: int = 2,
+        n_local_devices: int = 4) -> List[str]:
+    from repro.distributed.multihost import run_cpu_fleet
+
+    rows: List[str] = []
+    repo_root = os.path.join(os.path.dirname(__file__), "..")
+    budget = min(budget_edges, 60_000)    # the fleet is 2 cold processes
+    records = run_cpu_fleet(
+        _WORKER,
+        num_processes=num_processes, n_local_devices=n_local_devices,
+        timeout_s=560, cwd=repo_root,
+        extra_env={"REPRO_MH_BENCH_BUDGET": str(budget)})
+    records.sort(key=lambda r: r["rank"])
+    r0 = records[0]
+    results: Dict = {
+        "processes": num_processes,
+        "devices_per_host": n_local_devices,
+        "per_rank": records,
+        "serve_wall_s": r0["serve_wall_s"],
+        "requests": r0["requests_served"],
+        "forwarded": r0["forwarded"],
+        "host_placements": r0["host_placements"],
+        "giant_wall_s": max(r["giant_wall_s"] for r in records),
+        "block_counts": r0["block_counts"],
+    }
+    rows.append(csv_row(
+        "multihost/two_host_serve", r0["serve_wall_s"] * 1e6,
+        f"hosts={num_processes};requests={r0['requests_served']};"
+        f"forwarded={r0['forwarded']};"
+        f"placements={'|'.join(map(str, r0['host_placements']))};"
+        f"failovers={sum(r['failovers'] for r in records)}"))
+    counts = r0["block_counts"]
+    bal = (max(counts) * len(counts) / sum(counts)
+           if counts and sum(counts) else 0.0)
+    rows.append(csv_row(
+        "multihost/global_giant", results["giant_wall_s"] * 1e6,
+        f"global_devices={num_processes * n_local_devices};"
+        f"balance={bal:.3f};counts={'|'.join(map(str, counts))}"))
+
+    merged = {}
+    if os.path.exists(RESULTS_JSON):
+        try:
+            with open(RESULTS_JSON) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged["multihost"] = results
+    os.makedirs(os.path.dirname(RESULTS_JSON), exist_ok=True)
+    with open(RESULTS_JSON, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+    rows.append(csv_row(
+        "multihost/stats_json", 0.0,
+        f"hosts={num_processes};json={os.path.relpath(RESULTS_JSON)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in run():
+        print(r)

@@ -17,6 +17,10 @@ Emits ``name,us_per_call,derived`` CSV. Sections:
             graph with per-device balance (merges a "fleet" key into
             benchmarks/results/serve_stats.json; run with
             XLA_FLAGS=--xla_force_host_platform_device_count=8)
+  multihost cross-host serving: a two-subprocess CPU fleet (REAL
+            multi-process jax) routed by the placement directory —
+            forwarded traffic + the collective global-mesh giant (merges
+            a "multihost" key into benchmarks/results/serve_stats.json)
   moe       beyond-paper: block dispatch for MoE
   roofline  summary rows from the dry-run results (if present)
 """
@@ -61,9 +65,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6,table2,preproc,serve,"
-                         "routing,fleet,moe,roofline")
+                         "routing,fleet,multihost,moe,roofline")
     ap.add_argument("--budget-edges", type=int, default=200_000)
     args = ap.parse_args()
+    # multihost spawns its own 2-process fleet, so it is opt-in (not part
+    # of the default sweep: nightly CI runs it explicitly)
     want = set(args.only.split(",")) if args.only else \
         {"fig5", "fig6", "table2", "preproc", "serve", "routing", "fleet",
          "moe", "roofline"}
@@ -96,6 +102,10 @@ def main() -> None:
     if "fleet" in want:
         from .fleet_serve import run as fleet
         for r in fleet(budget_edges=args.budget_edges):
+            print(r)
+    if "multihost" in want:
+        from .multihost_serve import run as multihost
+        for r in multihost(budget_edges=args.budget_edges):
             print(r)
     if "moe" in want:
         from .moe_dispatch import run as moe

@@ -53,18 +53,24 @@ __all__ = [
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class PartitionPatterns:
-    """Per-degree partition patterns for degrees 1 .. deg_bound - 1.
+    """Per-degree partition patterns for degrees 1 .. deg_bound INCLUSIVE.
 
     ``block_rows[d]`` rows of degree ``d`` share one block; each of the
     ``factor[d]`` workload units covers ``warp_nzs[d]`` non-zeros of a row.
+
+    The boundary degree ``d == deg_bound`` is pattern-eligible: Algorithm 1
+    admits any ``d`` with ``f * max_warp_nzs >= d`` for some factor ``f`` of
+    ``max_block_warps``, and ``f = max_block_warps`` satisfies exactly
+    ``max_block_warps * max_warp_nzs = deg_bound >= d``. Only ``d >
+    deg_bound`` overflows a block's slab capacity and must split.
     """
 
     max_block_warps: int
     max_warp_nzs: int
     deg_bound: int
-    block_rows: np.ndarray  # int32[deg_bound]
-    warp_nzs: np.ndarray    # int32[deg_bound]
-    factor: np.ndarray      # int32[deg_bound]
+    block_rows: np.ndarray  # int32[deg_bound + 1]
+    warp_nzs: np.ndarray    # int32[deg_bound + 1]
+    factor: np.ndarray      # int32[deg_bound + 1]
     mode: str
 
 
@@ -78,18 +84,25 @@ def get_partition_patterns(
     mode: str = "paper",
     max_rows_per_block: int | None = None,
 ) -> PartitionPatterns:
-    """Algorithm 1: build the degree -> (block_rows, warp_nzs) table."""
+    """Algorithm 1: build the degree -> (block_rows, warp_nzs) table.
+
+    The table covers degrees 1 .. deg_bound inclusive: ``f *
+    max_warp_nzs >= d`` holds at ``d == deg_bound`` with ``f =
+    max_block_warps``, so the boundary degree is one ordinary pattern block
+    (block_rows=1, warp_nzs=max_warp_nzs), not a split row.
+    """
     deg_bound = max_block_warps * max_warp_nzs
-    block_rows = np.zeros(deg_bound, dtype=np.int32)
-    warp_nzs = np.zeros(deg_bound, dtype=np.int32)
-    factor = np.zeros(deg_bound, dtype=np.int32)
+    block_rows = np.zeros(deg_bound + 1, dtype=np.int32)
+    warp_nzs = np.zeros(deg_bound + 1, dtype=np.int32)
+    factor = np.zeros(deg_bound + 1, dtype=np.int32)
 
     if mode == "paper":
         factors = _factors(max_block_warps)
         i = 0
         deg = 1
-        # Verbatim transcription of Algorithm 1.
-        while deg < deg_bound:
+        # Verbatim transcription of Algorithm 1 (inclusive upper bound: the
+        # guard admits deg_bound itself via the largest factor).
+        while deg <= deg_bound:
             if factors[i] * max_warp_nzs >= deg:
                 block_rows[deg] = max_block_warps // factors[i]
                 warp_nzs[deg] = math.ceil(deg / factors[i])
@@ -101,7 +114,7 @@ def get_partition_patterns(
         # Dense VMEM-slab packing: as many rows as fit the slab, capped so
         # the one-hot segment matmul operand stays MXU-sized.
         cap = max_rows_per_block or max_block_warps
-        for deg in range(1, deg_bound):
+        for deg in range(1, deg_bound + 1):
             br = max(1, min(cap, deg_bound // deg))
             block_rows[deg] = br
             warp_nzs[deg] = deg  # one unit per row on TPU
@@ -166,7 +179,9 @@ def block_level_partition(g: CSRGraph, patterns: PartitionPatterns) -> BlockPart
         if d == 0:  # empty rows produce no work; outputs stay zero
             r += 1
             continue
-        if d < bound:
+        if d <= bound:
+            # pattern-eligible (Algorithm 1 admits d == bound via the
+            # largest factor: one row per block, slab filled exactly);
             # run length of this degree class (degree-sorted => contiguous)
             r_end = r
             while r_end < n and deg[r_end] == d:
@@ -184,7 +199,8 @@ def block_level_partition(g: CSRGraph, patterns: PartitionPatterns) -> BlockPart
                 rows_remaining -= take
             r = r_end
         else:
-            # Row degree exceeds a block's capacity: split across blocks.
+            # Row degree EXCEEDS a block's capacity (d > bound): split
+            # across blocks with revisit-accumulation in the kernels.
             loc = int(g.rowptr[r])
             remaining = d
             while remaining > 0:
@@ -334,7 +350,7 @@ def balance_stats(p) -> Dict[str, float]:
                             p.n_rows_blk.astype(np.int64)
                             * (p.meta[:, 3] >> 16).astype(np.int64)
                             * p.patterns.factor[np.minimum(p.meta[:, 0],
-                                                           p.patterns.deg_bound - 1)]))
+                                                           p.patterns.deg_bound)]))
         )
         return {
             "records": p.num_blocks,

@@ -1,16 +1,34 @@
-"""Fleet execution: sharded SpMM dispatch + device-partitioned plan cache.
+"""Fleet execution: sharded SpMM dispatch + partitioned plan placement.
 
-Three layers (ISSUE 4 / ROADMAP "shard hot plans across devices"):
+Four layers (ISSUE 4 "shard hot plans across devices" + ISSUE 5 cross-host):
 
 * :mod:`repro.distributed.shard_spmm` — ``shard_map``-based SpMM over
   :func:`repro.launch.mesh.graph_mesh`: feature sharding (zero-comm column
-  split) and block sharding (round-robin blocks, psum partials);
+  split) and block sharding (round-robin blocks, psum partials — also over
+  the GLOBAL multi-host mesh);
 * :mod:`repro.distributed.placement` — :class:`FleetPlanCache`, per-device
   ``PlanCache`` shards behind consistent-hash + load-aware placement;
-* :mod:`repro.serve.fleet` — ``FleetGraphEngine``, the continuous-batching
-  engine whose flush groups work by owning device and launches per-device
-  dispatches concurrently.
+* :mod:`repro.distributed.directory` — :class:`PlacementDirectory`, the
+  level above: ``plan_key -> (host, device)`` across a multi-process fleet
+  (consistent-hash over every host's device slots, epoch-stamped entries,
+  stale-host eviction);
+* :mod:`repro.distributed.multihost` — ``jax.distributed`` rendezvous,
+  the TCP forwarding data plane (:class:`PeerServer`/:class:`PeerClient`),
+  and the CPU-only multi-subprocess CI harness (:func:`run_cpu_fleet`).
+
+The serving entry points sit in :mod:`repro.serve.fleet`
+(``FleetGraphEngine`` per host, ``MultihostGraphEngine`` across hosts).
 """
+from .directory import HostInfo, Placement, PlacementDirectory
+from .multihost import (
+    MultihostContext,
+    PeerClient,
+    PeerServer,
+    free_port,
+    initialize_multihost,
+    peer_ports,
+    run_cpu_fleet,
+)
 from .placement import ConsistentHashRing, FleetPlanCache
 from .shard_spmm import (
     prepare_block_shards,
@@ -23,9 +41,19 @@ from .shard_spmm import (
 __all__ = [
     "ConsistentHashRing",
     "FleetPlanCache",
+    "HostInfo",
+    "MultihostContext",
+    "PeerClient",
+    "PeerServer",
+    "Placement",
+    "PlacementDirectory",
+    "free_port",
+    "initialize_multihost",
+    "peer_ports",
     "prepare_block_shards",
     "prepare_feature_shards",
     "round_robin_block_order",
+    "run_cpu_fleet",
     "spmm_block_sharded",
     "spmm_feature_sharded",
 ]

@@ -1,0 +1,263 @@
+"""Cross-host placement directory: ``plan_key -> (host, device)`` fleet-wide.
+
+:class:`~repro.distributed.placement.FleetPlanCache` caps the serving
+working set at one *host's* devices. The :class:`PlacementDirectory` is the
+level above it: every process of a multi-host JAX fleet holds one, and a
+plan key resolves to the ``(process_index, local_device)`` slot that owns
+the plan — so fleet capacity becomes the sum of every host's HBM, and a
+request admitted on any host is forwarded to (and served from) the one host
+whose device actually holds the staged plan.
+
+Placement policy (mirroring ``FleetPlanCache``, one level up):
+
+* **consistent hash over (host, device) slots** — every local device of
+  every host is a ring slot (labelled ``host{p}:dev{i}``, virtual nodes per
+  slot). Pure-hash placements are *deterministic across processes*: two
+  directories built from the same host table place every key identically
+  without any coordination, which is what makes the directory
+  "distributed" — there is no directory server to ask.
+* **load-aware override** — when the ring's slot already holds
+  ``load_spread`` more placements than the emptiest slot, the key goes to
+  the least-loaded slot instead. Overrides are an ingress-local
+  optimization (they depend on the order this process saw keys); the
+  executing host remains authoritative for which of ITS devices serves,
+  so divergent overrides cost at most a duplicate local staging, never a
+  wrong answer.
+* **epoch-stamped entries** — each host carries an ``epoch`` that bumps on
+  restart. An entry records its owner's epoch at placement time; when a
+  host re-announces with a newer epoch (it restarted and lost its plan
+  cache), every entry stamped with the old epoch is invalidated and
+  re-placed on next lookup. :meth:`evict_host` removes a host from the
+  ring entirely (crash, drain): its keys re-place onto the survivors,
+  everyone else's arcs stay put (the consistent-hashing property).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .placement import ConsistentHashRing
+
+__all__ = ["HostInfo", "Placement", "PlacementDirectory"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HostInfo:
+    """One fleet process: its rank, local device count, and restart epoch."""
+
+    process_index: int
+    n_devices: int
+    epoch: int = 0
+
+    def __post_init__(self):
+        if self.process_index < 0:
+            raise ValueError(f"bad process_index {self.process_index}")
+        if self.n_devices < 1:
+            raise ValueError(
+                f"host {self.process_index} needs >= 1 device, "
+                f"got {self.n_devices}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """A key's recorded owner: host rank, local device index, owner epoch."""
+
+    host: int
+    device: int
+    epoch: int
+
+
+def _slot_label(host: int, device: int) -> str:
+    return f"host{host}:dev{device}"
+
+
+class PlacementDirectory:
+    """Per-process view of the fleet-wide ``plan_key -> (host, device)`` map.
+
+    Thread-safe; every mutation runs under one lock. Keys are whatever the
+    plan cache uses (``(graph_hash, PartitionConfig)`` tuples) — the
+    directory only hashes their first element, mirroring the per-host ring.
+    """
+
+    def __init__(self, hosts: Sequence[HostInfo], *,
+                 load_spread: int = 4, vnodes: int = 32):
+        hosts = list(hosts)
+        if not hosts:
+            raise ValueError("placement directory needs >= 1 host")
+        ranks = [h.process_index for h in hosts]
+        if len(set(ranks)) != len(ranks):
+            raise ValueError(f"duplicate host ranks: {sorted(ranks)}")
+        self.load_spread = load_spread
+        self.vnodes = vnodes
+        self._lock = threading.Lock()
+        self._hosts: Dict[int, HostInfo] = {
+            h.process_index: h for h in hosts}
+        self._entries: Dict[object, Placement] = {}
+        self._slots: List[Tuple[int, int]] = []
+        self._ring: Optional[ConsistentHashRing] = None
+        self._rebuild_ring_locked()
+        # monotone counters (the fleet_* stats vocabulary feeds off these)
+        self.placement_overrides = 0
+        self.epoch_invalidations = 0   # entries dropped by a host restart
+        self.evicted_placements = 0    # entries dropped by evict_host
+
+    # ------------------------------------------------------------------ ring
+    def _rebuild_ring_locked(self) -> None:
+        self._slots = [(h.process_index, d)
+                       for h in sorted(self._hosts.values(),
+                                       key=lambda h: h.process_index)
+                       for d in range(h.n_devices)]
+        labels = [_slot_label(p, d) for p, d in self._slots]
+        self._ring = ConsistentHashRing(range(len(self._slots)),
+                                        vnodes=self.vnodes, labels=labels)
+
+    def slots(self) -> List[Tuple[int, int]]:
+        """Every live ``(host, device)`` slot, host-major."""
+        with self._lock:
+            return list(self._slots)
+
+    def hosts(self) -> List[HostInfo]:
+        with self._lock:
+            return sorted(self._hosts.values(),
+                          key=lambda h: h.process_index)
+
+    # ------------------------------------------------------------- placement
+    def place(self, key) -> Placement:
+        """Resolve (placing if unseen or stale) the owner of ``key``.
+
+        Stale entries — owner evicted, or owner restarted with a newer
+        epoch — are invalidated here and the key re-placed with current
+        ring/load data.
+        """
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is not None:
+                host = self._hosts.get(ent.host)
+                if host is not None and host.epoch == ent.epoch:
+                    return ent
+                # stale: the owner restarted (lost its plans) or left
+                del self._entries[key]
+                self.epoch_invalidations += 1
+            return self._place_locked(key)
+
+    def lookup(self, key) -> Optional[Placement]:
+        """Peek without placing; returns None for unseen AND stale keys."""
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                return None
+            host = self._hosts.get(ent.host)
+            if host is None or host.epoch != ent.epoch:
+                return None
+            return ent
+
+    def _place_locked(self, key) -> Placement:
+        hash_key = key[0] if isinstance(key, tuple) else str(key)
+        slot_idx = self._ring.lookup(str(hash_key))
+        counts = self._slot_counts_locked()
+        least = min(range(len(self._slots)), key=counts.__getitem__)
+        if counts[slot_idx] - counts[least] > self.load_spread:
+            slot_idx = least
+            self.placement_overrides += 1
+        host, device = self._slots[slot_idx]
+        ent = Placement(host, device, self._hosts[host].epoch)
+        self._entries[key] = ent
+        return ent
+
+    def _slot_counts_locked(self) -> List[int]:
+        index = {slot: i for i, slot in enumerate(self._slots)}
+        counts = [0] * len(self._slots)
+        for ent in self._entries.values():
+            i = index.get((ent.host, ent.device))
+            if i is not None:
+                counts[i] += 1
+        return counts
+
+    def release(self, key) -> None:
+        """Drop a key's entry (its plan was evicted from the owning shard)."""
+        with self._lock:
+            self._entries.pop(key, None)
+
+    # --------------------------------------------------------------- liveness
+    def update_host(self, host: HostInfo) -> int:
+        """(Re-)announce a host. A newer epoch invalidates every entry the
+        host owned under older epochs — a restarted process lost its plan
+        cache, so stale placements must not keep forwarding traffic to
+        plans that no longer exist. Returns the number invalidated.
+        A brand-new rank joins the ring (its arcs move ~1/slots of keys).
+
+        A changed DEVICE COUNT at the same epoch (the default directory
+        guessed a homogeneous fleet; the handshake learned the truth)
+        also invalidates the host's entries that point past the corrected
+        slot table — a placement on a device that does not exist must
+        re-place, and dangling entries would silently fall out of the
+        load accounting otherwise.
+        """
+        with self._lock:
+            prev = self._hosts.get(host.process_index)
+            self._hosts[host.process_index] = host
+            if prev is None or prev.n_devices != host.n_devices:
+                self._rebuild_ring_locked()
+            if prev is not None and prev.epoch != host.epoch:
+                stale = [k for k, e in self._entries.items()
+                         if e.host == host.process_index
+                         and e.epoch != host.epoch]
+            elif prev is not None and prev.n_devices != host.n_devices:
+                stale = [k for k, e in self._entries.items()
+                         if e.host == host.process_index
+                         and e.device >= host.n_devices]
+            else:
+                stale = []
+            for k in stale:
+                del self._entries[k]
+            self.epoch_invalidations += len(stale)
+            return len(stale)
+
+    def evict_host(self, process_index: int) -> int:
+        """Remove a host from the ring (crashed / drained): its entries drop
+        and its keys re-place onto the survivors on next lookup. Returns
+        the number of entries dropped. Evicting the last host raises.
+        """
+        with self._lock:
+            if process_index not in self._hosts:
+                return 0
+            if len(self._hosts) == 1:
+                raise ValueError("cannot evict the last live host")
+            del self._hosts[process_index]
+            self._rebuild_ring_locked()
+            dead = [k for k, e in self._entries.items()
+                    if e.host == process_index]
+            for k in dead:
+                del self._entries[k]
+            self.evicted_placements += len(dead)
+            return len(dead)
+
+    # ------------------------------------------------------------------ stats
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def host_placement_counts(self) -> Dict[int, int]:
+        """Live placements per host rank (0 for hosts with none)."""
+        with self._lock:
+            counts = {p: 0 for p in self._hosts}
+            for ent in self._entries.values():
+                if ent.host in counts:
+                    counts[ent.host] += 1
+            return counts
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            per_host = {p: 0 for p in self._hosts}
+            for ent in self._entries.values():
+                per_host[ent.host] = per_host.get(ent.host, 0) + 1
+            return {
+                "hosts": len(self._hosts),
+                "slots": len(self._slots),
+                "placements": len(self._entries),
+                "host_placements": [per_host[p] for p in sorted(per_host)],
+                "placement_overrides": self.placement_overrides,
+                "epoch_invalidations": self.epoch_invalidations,
+                "evicted_placements": self.evicted_placements,
+            }

@@ -1,0 +1,435 @@
+"""Multi-host fleet bootstrap + the forwarding data plane.
+
+Three concerns, one module:
+
+* **Rendezvous** — :func:`initialize_multihost` wraps
+  ``jax.distributed.initialize`` (coordinator address, process count, rank)
+  and returns a :class:`MultihostContext` with the local/global device
+  split. On CPU the gloo collectives implementation is selected so
+  cross-process ``psum`` works with fake host devices — the same SPMD
+  semantics the TPU pods will see, no hardware required.
+
+* **Data plane** — serving forwards *requests*, not collectives: a request
+  admitted on host A for a plan owned by host B travels over a plain TCP
+  channel (:class:`PeerServer` / :class:`PeerClient`, length-prefixed
+  pickled frames) and the answer comes back the same way. Collectives only
+  enter for the explicitly-collective global-mesh dispatch
+  (``MultihostGraphEngine.serve_global``). The channels carry a
+  ``hello`` handshake exchanging ``(process_index, epoch)`` so the
+  placement directory learns about restarts. The transport trusts its
+  peers (it is an intra-fleet protocol on a private interconnect, like any
+  parameter-server wire format) — do not expose the ports publicly.
+
+* **CI harness** — :func:`run_cpu_fleet` spawns N subprocesses, each a
+  JAX process with ``XLA_FLAGS=--xla_force_host_platform_device_count=K``
+  fake CPU devices, wired together with a free coordinator port and a
+  peer-port table published via ``REPRO_MH_*`` env vars. Workers call
+  :func:`initialize_multihost` with no arguments (env-driven) and print a
+  final JSON line; the harness returns one parsed record per rank. This is
+  how the two-process end-to-end tests and the CI smoke job get REAL
+  multi-process coverage on a single machine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pickle
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+__all__ = [
+    "MultihostContext",
+    "initialize_multihost",
+    "peer_ports",
+    "PeerServer",
+    "PeerClient",
+    "free_port",
+    "run_cpu_fleet",
+]
+
+# env vars the CPU harness publishes to its worker subprocesses
+_ENV_COORD = "REPRO_MH_COORD"
+_ENV_NPROCS = "REPRO_MH_NPROCS"
+_ENV_PID = "REPRO_MH_PID"
+_ENV_PEER_PORTS = "REPRO_MH_PEER_PORTS"
+_ENV_EPOCH = "REPRO_MH_EPOCH"
+
+
+@dataclasses.dataclass
+class MultihostContext:
+    """One process's view of the fleet after rendezvous."""
+
+    process_index: int
+    process_count: int
+    coordinator: Optional[str]
+    local_devices: List[Any]
+    global_devices: List[Any]
+    epoch: int = 0
+
+    @property
+    def n_local_devices(self) -> int:
+        return len(self.local_devices)
+
+    @property
+    def n_global_devices(self) -> int:
+        return len(self.global_devices)
+
+
+def initialize_multihost(coordinator_address: Optional[str] = None,
+                         num_processes: Optional[int] = None,
+                         process_id: Optional[int] = None,
+                         *, epoch: Optional[int] = None) -> MultihostContext:
+    """Rendezvous this process into the fleet; env-driven when arguments are
+    omitted (the CPU harness publishes ``REPRO_MH_*``).
+
+    Must run before any other JAX call touches devices (the usual
+    ``jax.distributed.initialize`` contract). A single-process fleet
+    (``num_processes`` absent or 1) skips distributed init entirely and
+    degrades to the local device set — the engine layers all treat that as
+    the one-host case.
+    """
+    coordinator_address = coordinator_address or os.environ.get(_ENV_COORD)
+    if num_processes is None:
+        num_processes = int(os.environ.get(_ENV_NPROCS, "1"))
+    if process_id is None:
+        process_id = int(os.environ.get(_ENV_PID, "0"))
+    if epoch is None:
+        epoch = int(os.environ.get(_ENV_EPOCH, "0"))
+
+    import jax
+
+    if num_processes > 1:
+        if coordinator_address is None:
+            raise ValueError(
+                f"multi-process fleet ({num_processes} processes) needs a "
+                f"coordinator address (or {_ENV_COORD} in the environment)")
+        try:
+            # CPU cross-process collectives need gloo; harmless elsewhere
+            jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        except Exception:  # noqa: BLE001 — older jax: option absent
+            pass
+        jax.distributed.initialize(coordinator_address=coordinator_address,
+                                   num_processes=num_processes,
+                                   process_id=process_id)
+    return MultihostContext(
+        process_index=(jax.process_index() if num_processes > 1
+                       else process_id),
+        process_count=(jax.process_count() if num_processes > 1
+                       else max(1, num_processes)),
+        coordinator=coordinator_address,
+        local_devices=list(jax.local_devices()),
+        global_devices=list(jax.devices()),
+        epoch=epoch,
+    )
+
+
+def peer_ports() -> Dict[int, int]:
+    """The harness-published ``rank -> data-plane port`` table (env-driven)."""
+    raw = os.environ.get(_ENV_PEER_PORTS, "")
+    if not raw:
+        return {}
+    return {int(r): int(p)
+            for r, p in (pair.split(":") for pair in raw.split(","))}
+
+
+# --------------------------------------------------------------------------
+# framed transport
+# --------------------------------------------------------------------------
+_FRAME_HDR = struct.Struct(">Q")
+_MAX_FRAME = 1 << 31      # 2 GiB: a corrupted header must not OOM the host
+
+
+def _send_frame(sock: socket.socket, obj: Any) -> None:
+    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    sock.sendall(_FRAME_HDR.pack(len(payload)) + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed the channel mid-frame")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def _recv_frame(sock: socket.socket) -> Any:
+    (n,) = _FRAME_HDR.unpack(_recv_exact(sock, _FRAME_HDR.size))
+    if n > _MAX_FRAME:
+        raise ConnectionError(f"oversized frame ({n} bytes)")
+    return pickle.loads(_recv_exact(sock, n))
+
+
+class PeerServer:
+    """Data-plane listener: one daemon accept-loop, one thread per peer
+    connection, a handler registry keyed by op name.
+
+    Handlers run on the connection thread and may block (e.g. submitting a
+    forwarded request into the local scheduler and waiting on its future) —
+    each peer connection is its own thread, so one slow request never
+    stalls a different peer. Handler exceptions travel back as ``("err",
+    repr)`` frames and re-raise caller-side; transport errors surface as
+    ``ConnectionError`` so the caller can fail the peer over.
+    """
+
+    def __init__(self, port: int = 0, *, host: str = "127.0.0.1",
+                 process_index: int = 0, epoch: int = 0,
+                 n_devices: int = 1):
+        self.process_index = process_index
+        self.epoch = epoch
+        self.n_devices = n_devices
+        self._handlers: Dict[str, Callable[[Any], Any]] = {}
+        self._lock = threading.Lock()
+        self._conn_threads: List[threading.Thread] = []
+        self._closing = False
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(16)
+        self.port = self._sock.getsockname()[1]
+        self.requests_served = 0
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"peer-server-{self.port}",
+            daemon=True)
+        self._accept_thread.start()
+
+    def register(self, op: str, fn: Callable[[Any], Any]) -> None:
+        with self._lock:
+            self._handlers[op] = fn
+
+    def close(self) -> None:
+        self._closing = True
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def _accept_loop(self) -> None:
+        while not self._closing:
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return              # listener closed
+            t = threading.Thread(target=self._serve_conn, args=(conn,),
+                                 daemon=True)
+            t.start()
+            # prune finished handler threads: reconnect-after-reset churn
+            # must not grow this list without bound on a long-lived server
+            self._conn_threads = [c for c in self._conn_threads
+                                  if c.is_alive()]
+            self._conn_threads.append(t)
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        with conn:
+            try:
+                while True:
+                    op, payload = _recv_frame(conn)
+                    if op == "hello":
+                        _send_frame(conn, ("ok", {
+                            "process_index": self.process_index,
+                            "epoch": self.epoch,
+                            "n_devices": self.n_devices}))
+                        continue
+                    with self._lock:
+                        fn = self._handlers.get(op)
+                    if fn is None:
+                        _send_frame(conn, ("err", f"unknown op {op!r}"))
+                        continue
+                    try:
+                        result = fn(payload)
+                    except Exception:  # noqa: BLE001 — ship to the caller
+                        _send_frame(conn, ("err", traceback.format_exc()))
+                        continue
+                    with self._lock:
+                        self.requests_served += 1
+                    _send_frame(conn, ("ok", result))
+            except (ConnectionError, EOFError, OSError):
+                return              # peer went away; its thread ends here
+            except Exception:  # noqa: BLE001 — corrupt frame/pickle: drop
+                return              # the CONNECTION (socket closes, the
+                #                     peer reconnects), never the server
+
+
+class PeerClient:
+    """One host's channel to one peer: lazy connect, ``hello`` handshake,
+    one in-flight request per channel (a lock serializes; the engine runs
+    one forward task per peer per flush, so this is the natural unit).
+    """
+
+    def __init__(self, address: Tuple[str, int], *,
+                 process_index: int = 0, epoch: int = 0,
+                 timeout_s: float = 120.0, connect_timeout_s: float = 30.0):
+        self.address = address
+        self.process_index = process_index   # OUR rank (sent in the hello)
+        self.epoch = epoch
+        self.timeout_s = timeout_s
+        self.connect_timeout_s = connect_timeout_s
+        self.peer_process: Optional[int] = None
+        self.peer_epoch: Optional[int] = None
+        self.peer_devices: Optional[int] = None
+        self._sock: Optional[socket.socket] = None
+        self._lock = threading.Lock()
+
+    def _connect_locked(self) -> socket.socket:
+        if self._sock is not None:
+            return self._sock
+        # fleet processes come up asynchronously: a refused connection
+        # usually means the peer has not bound its server YET, so retry
+        # with backoff until connect_timeout_s before giving up (a dead
+        # peer then surfaces as ConnectionError -> directory eviction)
+        deadline = time.monotonic() + self.connect_timeout_s
+        delay = 0.05
+        while True:
+            try:
+                sock = socket.create_connection(self.address,
+                                                timeout=self.timeout_s)
+                break
+            except OSError:
+                if time.monotonic() >= deadline:
+                    raise
+                time.sleep(delay)
+                delay = min(delay * 2, 0.5)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        _send_frame(sock, ("hello", {"process_index": self.process_index,
+                                     "epoch": self.epoch}))
+        status, info = _recv_frame(sock)
+        if status != "ok":
+            sock.close()
+            raise ConnectionError(f"handshake rejected: {info}")
+        self.peer_process = int(info["process_index"])
+        self.peer_epoch = int(info["epoch"])
+        self.peer_devices = int(info.get("n_devices", 1))
+        self._sock = sock
+        return sock
+
+    def handshake(self) -> Tuple[int, int]:
+        """Connect (if needed) and return the peer's ``(rank, epoch)``."""
+        with self._lock:
+            self._connect_locked()
+            return self.peer_process, self.peer_epoch
+
+    def request(self, op: str, payload: Any) -> Any:
+        """One round trip; remote handler exceptions re-raise as
+        RuntimeError, transport failures as ConnectionError (after which
+        the channel is reset so the next request reconnects)."""
+        with self._lock:
+            sock = self._connect_locked()
+            try:
+                _send_frame(sock, (op, payload))
+                status, result = _recv_frame(sock)
+            except (ConnectionError, EOFError, OSError) as e:
+                self._reset_locked()
+                raise ConnectionError(
+                    f"peer {self.address} channel failed: {e}") from e
+            if status != "ok":
+                raise RuntimeError(f"remote {op!r} failed:\n{result}")
+            return result
+
+    def _reset_locked(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def close(self) -> None:
+        with self._lock:
+            self._reset_locked()
+
+
+# --------------------------------------------------------------------------
+# CPU-only fleet harness (CI / tests)
+# --------------------------------------------------------------------------
+def free_port() -> int:
+    """An OS-assigned free TCP port (racy in principle, fine for CI)."""
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def run_cpu_fleet(worker_src: str, *, num_processes: int = 2,
+                  n_local_devices: int = 4, timeout_s: float = 600.0,
+                  extra_env: Optional[Dict[str, str]] = None,
+                  cwd: Optional[str] = None) -> List[Dict]:
+    """Spawn ``num_processes`` CPU JAX processes running ``worker_src``.
+
+    Each worker gets ``n_local_devices`` fake host devices, the coordinator
+    address, its rank, a shared epoch, and the full rank->port table for
+    the forwarding data plane, all via ``REPRO_MH_*`` env vars — so the
+    worker body is just::
+
+        ctx = initialize_multihost()          # env-driven
+        ports = peer_ports()                  # rank -> data-plane port
+        ... build directory/engine, serve, and finally ...
+        print(json.dumps(record))             # LAST stdout line
+
+    Returns the parsed final-JSON-line of every rank (rank order). Raises
+    RuntimeError with the failing rank's tail of stderr on any non-zero
+    exit — including when a worker hangs past ``timeout_s`` (all workers
+    are killed so CI never wedges).
+    """
+    coord_port = free_port()
+    ports = {r: free_port() for r in range(num_processes)}
+    port_table = ",".join(f"{r}:{p}" for r, p in sorted(ports.items()))
+    procs = []
+    for rank in range(num_processes):
+        env = dict(os.environ)
+        env.update({
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS":
+                f"--xla_force_host_platform_device_count={n_local_devices}",
+            _ENV_COORD: f"127.0.0.1:{coord_port}",
+            _ENV_NPROCS: str(num_processes),
+            _ENV_PID: str(rank),
+            _ENV_PEER_PORTS: port_table,
+            _ENV_EPOCH: "0",
+        })
+        if extra_env:
+            env.update(extra_env)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", worker_src],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=env, cwd=cwd))
+    # drain every rank's pipes CONCURRENTLY: waiting on rank 0 while rank
+    # 1's pipes sit unread lets rank 1 block on a full 64 KiB pipe buffer
+    # mid-collective, wedging rank 0 too — a spurious "hang" with no bug
+    outs: List[Optional[Tuple[str, str]]] = [None] * num_processes
+    drainers = []
+    for rank, p in enumerate(procs):
+        t = threading.Thread(
+            target=lambda r=rank, pr=p: outs.__setitem__(r, pr.communicate()),
+            daemon=True)
+        t.start()
+        drainers.append(t)
+    deadline = time.monotonic() + timeout_s
+    for t in drainers:
+        t.join(max(0.0, deadline - time.monotonic()))
+    if any(t.is_alive() for t in drainers):
+        for p in procs:
+            p.kill()
+        for t in drainers:     # communicate() returns once the kill lands
+            t.join(30.0)
+        raise RuntimeError(
+            f"cpu fleet timed out after {timeout_s}s; rank stderr tails:\n"
+            + "\n".join(f"--- rank {r} ---\n{o[1][-2000:]}"
+                        for r, o in enumerate(outs) if o))
+    records = []
+    for rank, p in enumerate(procs):
+        out, err = outs[rank]
+        if p.returncode != 0:
+            raise RuntimeError(
+                f"fleet rank {rank} exited {p.returncode}:\n{err[-4000:]}")
+        lines = [ln for ln in out.strip().splitlines() if ln.strip()]
+        if not lines:
+            raise RuntimeError(f"fleet rank {rank} printed no JSON record")
+        records.append(json.loads(lines[-1]))
+    return records

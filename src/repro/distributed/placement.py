@@ -43,16 +43,29 @@ class ConsistentHashRing:
     ``vnodes`` virtual points per member smooth the arc lengths; lookup is
     a bisect over the sorted point list. Members are the fleet's device
     indices — adding/removing a device moves only the keys on its arcs.
+
+    ``labels`` optionally names each member's ring points (same length as
+    ``members``). Point positions depend only on the label, so a caller
+    whose member ids are *indices into a mutable slot table* (the
+    cross-host placement directory) keeps surviving keys stationary when
+    the table shrinks: rebuild the ring with the surviving labels and only
+    the removed member's arcs move.
     """
 
-    def __init__(self, members: Sequence[int], vnodes: int = 64):
+    def __init__(self, members: Sequence[int], vnodes: int = 64,
+                 labels: Optional[Sequence[str]] = None):
+        members = list(members)
         if not members:
             raise ValueError("hash ring needs >= 1 member")
+        if labels is not None and len(labels) != len(members):
+            raise ValueError(
+                f"{len(labels)} labels for {len(members)} members")
         self.vnodes = vnodes
         self._points: List[Tuple[int, int]] = []
-        for m in members:
+        for j, m in enumerate(members):
+            label = labels[j] if labels is not None else f"dev{m}"
             for v in range(vnodes):
-                h = hashlib.blake2b(f"dev{m}#v{v}".encode(),
+                h = hashlib.blake2b(f"{label}#v{v}".encode(),
                                     digest_size=8).digest()
                 self._points.append((int.from_bytes(h, "big"), int(m)))
         self._points.sort()
@@ -105,6 +118,22 @@ class FleetPlanCache:
         """Owning device index of ``key`` (placing it if never seen)."""
         with self._lock:
             return self._place_locked(key)
+
+    def pin(self, key: Tuple[str, PartitionConfig], device_index: int) -> int:
+        """Pre-record an externally-decided placement for ``key``.
+
+        The cross-host placement directory decides (host, device) fleet-wide;
+        the owning host pins the directory's *device* choice here so its
+        local shard placement agrees with what every other host believes.
+        Sticky like any other placement: an existing placement wins (the
+        plan is already resident there) and is returned.
+        """
+        if not 0 <= device_index < len(self.devices):
+            raise ValueError(
+                f"pin({device_index}) outside the {len(self.devices)}-device "
+                f"fleet")
+        with self._lock:
+            return self._placements.setdefault(key, int(device_index))
 
     def _place_locked(self, key: Tuple[str, PartitionConfig]) -> int:
         dev = self._placements.get(key)

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels.ops import spmm_blocked
 
@@ -47,6 +47,7 @@ __all__ = [
     "round_robin_block_order",
     "prepare_feature_shards",
     "prepare_block_shards",
+    "commit_block_shards_global",
     "spmm_feature_sharded",
     "spmm_block_sharded",
 ]
@@ -163,6 +164,52 @@ def prepare_block_shards(slabs: Dict, n_rows: int, n_devices: int
     return {k: jnp.asarray(v[order]) for k, v in padded.items()}, live
 
 
+def _mesh_spans_processes(mesh: Mesh) -> bool:
+    """True when ``mesh`` contains another process's (non-addressable)
+    devices — the global serving mesh of a multi-host fleet."""
+    procs = {d.process_index for d in mesh.devices.flat}
+    return len(procs) > 1
+
+
+@functools.lru_cache(maxsize=32)
+def _global_block_sharded_fn(mesh: Mesh, n_rows: int):
+    """Jitted multi-host block-shard computation, cached per (mesh,
+    n_rows): rebuilding the shard_map closure per call would defeat jit's
+    identity-keyed cache and recompile on EVERY global dispatch."""
+    def _local(colidx, values, rowloc, out_row, x_rep):
+        part = spmm_blocked(colidx, values, rowloc, out_row, x_rep,
+                            n_rows=n_rows)
+        return jax.lax.psum(part, "dev")
+
+    return jax.jit(shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P("dev"), P("dev"), P("dev"), P("dev"), P()),
+        out_specs=P(),
+    ))
+
+
+def commit_block_shards_global(arrs: Dict[str, jax.Array], mesh: Mesh
+                               ) -> Dict[str, jax.Array]:
+    """Commit prepared block-shard slabs to the GLOBAL mesh sharding.
+
+    Every process holds the same host-side value (plans build
+    deterministically from the same graph), so ``device_put`` with the
+    global sharding just extracts this process's addressable shards.
+    Memoize the result per plan (the fleet engine stores it in its prep
+    cache) — the slabs are immutable, so the transfer is a one-time cost.
+    Already-committed arrays pass through untouched.
+    """
+    shard = NamedSharding(mesh, P("dev"))
+    out = {}
+    for k, v in arrs.items():
+        if getattr(v, "sharding", None) == shard:
+            out[k] = v
+        else:
+            out[k] = jax.device_put(np.asarray(v), shard)
+    return out
+
+
 def spmm_block_sharded(slabs: Dict, x: jax.Array, n_rows: int, mesh: Mesh,
                        *, prepared: Optional[Tuple[Dict, np.ndarray]] = None
                        ) -> Tuple[jax.Array, np.ndarray]:
@@ -173,22 +220,39 @@ def spmm_block_sharded(slabs: Dict, x: jax.Array, n_rows: int, mesh: Mesh,
     row slabs back together. Returns ``(out, live_counts)`` — the per-device
     REAL block counts, the balance evidence the fleet stats export.
     ``prepared`` takes a memoized :func:`prepare_block_shards` result.
+
+    The mesh may be the GLOBAL multi-host mesh
+    (:func:`repro.launch.mesh.multihost_graph_mesh`): inputs are then
+    committed through explicit ``NamedSharding``s — each process extracts
+    its addressable shards from the (host-replicated) arrays, the psum
+    crosses hosts, and the replicated output is readable on every host.
+    That call is SPMD-collective: EVERY process of the fleet must enter it
+    with identical arguments (the ``serve_global`` contract).
     """
     d = int(mesh.devices.size)
     arrs, live = (prepared if prepared is not None
                   else prepare_block_shards(slabs, n_rows, d))
 
-    def _local(colidx, values, rowloc, out_row, x_rep):
-        part = spmm_blocked(colidx, values, rowloc, out_row, x_rep,
-                            n_rows=int(n_rows))
-        return jax.lax.psum(part, "dev")
+    x = jnp.asarray(x, dtype=jnp.float32)
+    if _mesh_spans_processes(mesh):
+        # multi-host: explicit global shardings + the cached jitted fn
+        # (callers memoize commit_block_shards_global per plan, so the
+        # slab transfer is paid once; X is fresh data, committed per call)
+        arrs = commit_block_shards_global(arrs, mesh)
+        x = jax.device_put(np.asarray(x), NamedSharding(mesh, P()))
+        fn = _global_block_sharded_fn(mesh, int(n_rows))
+    else:
+        def _local(colidx, values, rowloc, out_row, x_rep):
+            part = spmm_blocked(colidx, values, rowloc, out_row, x_rep,
+                                n_rows=int(n_rows))
+            return jax.lax.psum(part, "dev")
 
-    fn = shard_map(
-        _local,
-        mesh=mesh,
-        in_specs=(P("dev"), P("dev"), P("dev"), P("dev"), P()),
-        out_specs=P(),
-    )
-    out = fn(arrs["colidx"], arrs["values"], arrs["rowloc"], arrs["out_row"],
-             jnp.asarray(x, dtype=jnp.float32))
+        fn = shard_map(
+            _local,
+            mesh=mesh,
+            in_specs=(P("dev"), P("dev"), P("dev"), P("dev"), P()),
+            out_specs=P(),
+        )
+    out = fn(arrs["colidx"], arrs["values"], arrs["rowloc"],
+             arrs["out_row"], x)
     return out, live

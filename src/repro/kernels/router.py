@@ -265,7 +265,8 @@ class FleetDecision:
     the work (the whole dispatch for ``strategy="single"``); ``single`` is
     what one device alone would have run — keeping both makes the win
     legible in logs ("windowed alone, resident per-device once feature-
-    sharded 8 ways").
+    sharded 8 ways"). ``n_hosts`` > 1 marks a GLOBAL-mesh dispatch: the
+    devices span several processes and execution is SPMD-collective.
     """
 
     strategy: str             # "single" | "feature" | "block"
@@ -274,17 +275,36 @@ class FleetDecision:
     single: RoutingDecision
     num_blocks: int
     reason: str
+    n_hosts: int = 1          # processes the devices span (1 == one host)
 
     def describe(self) -> str:
-        return (f"{self.strategy}x{self.n_devices}: "
+        span = (f"x{self.n_devices}dev/{self.n_hosts}host"
+                if self.n_hosts > 1 else f"x{self.n_devices}")
+        return (f"{self.strategy}{span}: "
                 f"per-device {self.per_device.backend} ({self.reason})")
 
 
 def route_fleet(n_x_rows: int, n_features: int, C: int, R: int,
                 num_blocks: int, n_devices: int,
                 *, f_tile: int = 128, itemsize: int = 4,
-                min_blocks_per_device: int = 4) -> FleetDecision:
+                min_blocks_per_device: int = 4,
+                n_hosts: int = 1) -> FleetDecision:
     """Pick single-device vs feature-sharded vs block-sharded execution.
+
+    ``n_hosts > 1`` routes over the GLOBAL mesh (``n_devices`` then counts
+    every process's devices). Two things change at host granularity:
+
+    * **feature sharding is disabled** — its output comes back
+      column-sharded across *hosts*, so every answer would pay a
+      cross-host gather on the serving path; the per-request win the
+      zero-communication column split buys within one host inverts once
+      DCN sits between the shards. Wide dispatches stay single-host
+      (the placement directory's owner serves them).
+    * **block sharding stays eligible** — its ``psum`` combine returns a
+      fully-replicated result on every host (each participant reads its
+      answer locally), which is exactly the collective a giant graph
+      must pay anyway to exceed one host's memory. The block threshold
+      still applies per GLOBAL device.
 
     The fleet's aggregate VMEM/HBM budget is the single-device budget times
     the device count, and the two sharding strategies spend it differently:
@@ -313,6 +333,8 @@ def route_fleet(n_x_rows: int, n_features: int, C: int, R: int,
     change the X *row* count, so a dispatch that is windowed alone stays
     windowed per device, just with 1/n-th of the feature sweeps.
     """
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
     single = route_spmm(n_x_rows, n_features, C, R,
                         f_tile=f_tile, itemsize=itemsize)
     if n_devices <= 1:
@@ -320,7 +342,7 @@ def route_fleet(n_x_rows: int, n_features: int, C: int, R: int,
                              "one device")
     f_pad = pad_features(n_features, f_tile)
     f_tiles = f_pad // f_tile
-    if f_tiles >= n_devices:
+    if f_tiles >= n_devices and n_hosts == 1:
         per = route_spmm(n_x_rows, f_pad // n_devices, C, R,
                          f_tile=f_tile, itemsize=itemsize)
         return FleetDecision(
@@ -332,16 +354,29 @@ def route_fleet(n_x_rows: int, n_features: int, C: int, R: int,
             and num_blocks >= min_blocks_per_device * n_devices):
         # per-step footprint is block-count-independent: one device's share
         # routes exactly like the whole dispatch, with B/n grid steps
+        span = (f"{n_devices} devices"
+                if n_hosts == 1 else
+                f"{n_devices} devices on {n_hosts} hosts (global mesh, "
+                f"SPMD-collective)")
+        feat_note = (
+            f"features are narrow ({f_tiles} tile(s) < {n_devices} devices)"
+            if f_tiles < n_devices else
+            f"feature split is disabled across {n_hosts} hosts "
+            f"({f_tiles} tiles would shard, but column-split answers pay "
+            f"a cross-host gather)")
         return FleetDecision(
             "block", n_devices, single, single, num_blocks,
             f"single-device estimate demotes to {single.backend} and "
-            f"features are narrow ({f_tiles} tile(s) < {n_devices} "
-            f"devices): {num_blocks} blocks round-robin, X replicated, "
-            f"partials psum")
+            f"{feat_note}: {num_blocks} blocks round-robin over {span}, "
+            f"X replicated, partials psum", n_hosts=n_hosts)
+    why_not_feature = ("" if f_tiles < n_devices else
+                       "; feature split skipped: cross-host column "
+                       "gather would tax every answer")
     return FleetDecision(
         "single", 1, single, single, num_blocks,
         f"{single.backend} on one device ({f_tiles} feature tile(s), "
-        f"{num_blocks} block(s)): sharding would cost more than it saves")
+        f"{num_blocks} block(s)): sharding would cost more than it "
+        f"saves{why_not_feature}")
 
 
 def assert_resident_fits(n_x_rows: int, n_features: int, C: int, R: int,

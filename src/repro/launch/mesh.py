@@ -31,6 +31,22 @@ def make_host_mesh(model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def multihost_graph_mesh() -> Mesh:
+    """Global 1-D serving mesh spanning EVERY process's devices.
+
+    The cross-host analogue of :func:`graph_mesh`: one flat "dev" axis over
+    ``jax.devices()`` — which, after ``jax.distributed.initialize``, is the
+    union of all processes' local devices in process-major order. Any
+    computation over this mesh is SPMD-collective: every process must enter
+    it with the same program (the ``MultihostGraphEngine.serve_global``
+    contract). On a single process it degenerates to ``graph_mesh()``.
+    """
+    devices = jax.devices()
+    if not devices:
+        raise ValueError("multihost_graph_mesh found no devices")
+    return Mesh(np.asarray(devices), ("dev",))
+
+
 def graph_mesh(n_devices: Optional[int] = None) -> Mesh:
     """1-D mesh for fleet graph serving: ``n_devices`` devices on axis "dev".
 

@@ -29,6 +29,14 @@ Validated on CPU via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 (see ``tests/test_fleet.py`` and the CI device matrix) — real multi-device
 semantics, no hardware required. On one device everything degrades to the
 single-device engine (the pool has one worker, sharding never triggers).
+
+:class:`MultihostGraphEngine` lifts the same structure one level: a flush
+first splits work by owning HOST (the distributed
+:class:`~repro.distributed.directory.PlacementDirectory`), forwards
+remote-owned groups to their owner over the peer data plane, and runs the
+locally-owned share through the per-device path above. Validated with REAL
+multi-process JAX (two CPU subprocesses, ``jax.distributed`` rendezvous)
+in ``tests/test_multihost.py`` and the CI multi-process smoke job.
 """
 from __future__ import annotations
 
@@ -36,24 +44,32 @@ import threading
 import time
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
-from ..core.plan_cache import PartitionConfig, PartitionPlan
+from ..core.graph import CSRGraph, gcn_normalize
+from ..core.plan_cache import (
+    PartitionConfig, PartitionPlan, build_partition_plan, graph_content_hash,
+)
+from ..distributed.directory import HostInfo, PlacementDirectory
+from ..distributed.multihost import (
+    MultihostContext, PeerClient, PeerServer, peer_ports,
+)
 from ..distributed.placement import FleetPlanCache
 from ..distributed.shard_spmm import (
-    prepare_block_shards, prepare_feature_shards,
-    spmm_block_sharded, spmm_feature_sharded,
+    commit_block_shards_global, prepare_block_shards,
+    prepare_feature_shards, spmm_block_sharded, spmm_feature_sharded,
 )
 from ..kernels.router import FleetDecision, route_fleet
-from ..launch.mesh import graph_mesh
+from ..launch.mesh import graph_mesh, multihost_graph_mesh
 from .graph_engine import GraphServeEngine
 from .scheduler import WorkItem
 
-__all__ = ["FleetGraphEngine"]
+__all__ = ["FleetGraphEngine", "MultihostGraphEngine"]
 
 
 class FleetGraphEngine(GraphServeEngine):
@@ -69,6 +85,7 @@ class FleetGraphEngine(GraphServeEngine):
         self,
         *,
         n_devices: Optional[int] = None,
+        devices: Optional[Sequence] = None,
         capacity_per_device: int = 32,
         load_spread: int = 4,
         save_dir: Optional[str] = None,
@@ -76,7 +93,14 @@ class FleetGraphEngine(GraphServeEngine):
         config: Optional[PartitionConfig] = None,
         **engine_kw,
     ):
-        self.mesh = graph_mesh(n_devices)
+        if devices is not None:
+            # explicit device set (the multihost engine passes its process's
+            # LOCAL devices — jax.devices() is the whole fleet there)
+            if n_devices is not None:
+                raise ValueError("pass n_devices or devices, not both")
+            self.mesh = Mesh(np.asarray(list(devices)), ("dev",))
+        else:
+            self.mesh = graph_mesh(n_devices)
         self.devices = list(self.mesh.devices.flat)
         self.n_devices = len(self.devices)
         cache = engine_kw.pop("cache", None)
@@ -252,13 +276,7 @@ class FleetGraphEngine(GraphServeEngine):
         out = jnp.asarray(np.asarray(out)[prep["inv_np"]])
         # slice outside the lock (same rule as the base dispatch: concurrent
         # launches must not serialize compute on the counter lock)
-        answers: List[Tuple[WorkItem, jax.Array]] = []
-        col = 0
-        wait_s = 0.0
-        for item, w in zip(grp, widths):
-            answers.append((item, out[:, col:col + w]))
-            col += w
-            wait_s += now - item.t_enqueue
+        answers, wait_s = self._slice_answers(grp, widths, out, now)
         with self._counters_lock:
             self.requests_served += len(grp)
             self.rows_served += plan.n_rows * len(grp)
@@ -281,9 +299,13 @@ class FleetGraphEngine(GraphServeEngine):
         for item, result in answers:
             item.complete(result)
 
-    def _shard_prepared(self, strategy: str, plan: PartitionPlan) -> Dict:
-        """Memoized per-(plan, strategy) sharded-dispatch preparation."""
-        key = (plan.key, strategy)
+    def _shard_prepared(self, strategy: str, plan: PartitionPlan,
+                        n_devices: Optional[int] = None) -> Dict:
+        """Memoized per-(plan, strategy, device-count) sharded-dispatch
+        preparation (the multihost engine preps block shards for the
+        GLOBAL device count, the local paths for the local one)."""
+        n = n_devices if n_devices is not None else self.n_devices
+        key = (plan.key, strategy, n)
         with self._prep_lock:
             ent = self._shard_prep.get(key)
             if ent is not None:
@@ -292,8 +314,7 @@ class FleetGraphEngine(GraphServeEngine):
         if strategy == "feature":
             ent = {"args": prepare_feature_shards(plan.slabs), "live": None}
         else:
-            args, live = prepare_block_shards(plan.slabs, plan.n_rows,
-                                              self.n_devices)
+            args, live = prepare_block_shards(plan.slabs, plan.n_rows, n)
             ent = {"args": args, "live": live}
         ent["inv_np"] = np.asarray(plan.inv_perm)
         with self._prep_lock:
@@ -306,6 +327,12 @@ class FleetGraphEngine(GraphServeEngine):
         if self._t_first_launch is None:
             self._t_first_launch = t0
         self._t_last_done = max(self._t_last_done or 0.0, t0 + dt)
+
+    # the multihost subclass keeps per-graph flush groups intact; factoring
+    # the split point here keeps ONE grouping implementation
+    def _flush_items_locally(self, items: List[WorkItem]) -> None:
+        """Serve a subset of a flush entirely on this host's devices."""
+        FleetGraphEngine._flush(self, items)
 
     # ------------------------------------------------------------------ stats
     def _stats_locked(self, s: Dict[str, float]) -> Dict[str, float]:
@@ -346,4 +373,363 @@ class FleetGraphEngine(GraphServeEngine):
             fleet_block_balance=(max(counts) * len(counts) / sum(counts)
                                  if counts and sum(counts) else 0.0),
         )
+        return s
+
+
+class MultihostGraphEngine(FleetGraphEngine):
+    """Cross-host fleet serving: one engine per process, one shared
+    placement directory, a TCP forwarding data plane between hosts.
+
+    The flush pipeline grows exactly one stage over the single-host fleet::
+
+        flush -> group by graph
+              -> split groups by OWNING HOST (placement directory)
+                   local groups  -> the inherited per-device concurrent path
+                   remote groups -> fused request forwarded to the owner
+                                    host over its peer channel; the owner
+                                    dispatches it INLINE on the connection
+                                    thread (never through its scheduler
+                                    queue — two hosts forwarding to each
+                                    other through single flush workers
+                                    would deadlock), the answer travels
+                                    back and resolves the ingress futures
+
+    Ownership: :class:`~repro.distributed.directory.PlacementDirectory`
+    maps each plan key to a ``(host, device)`` slot; the owning host pins
+    the slot's device into its local :class:`FleetPlanCache`
+    (:meth:`FleetPlanCache.pin`), so what the fleet believes and where the
+    slabs actually sit agree. Registration is symmetric (every host
+    registers every graph — the bytes come from shared storage) but only
+    the OWNER builds and stages the plan: fleet plan capacity is the sum
+    over hosts, which is the whole point.
+
+    Failure handling: a dead peer channel fails over — the affected items
+    are served locally from a freshly-built plan, and after
+    ``evict_after_failures`` CONSECUTIVE transport failures the owner is
+    evicted from the directory (its keys re-place onto survivors; a
+    recovered host rejoins via :meth:`connect_peers`). Remote EXECUTION
+    errors do not fail over; they propagate to the submitting caller like
+    any local dispatch error.
+
+    ``serve_global`` is the explicitly-COLLECTIVE path for graphs too big
+    for any single host: every process must call it with identical
+    arguments; the plan's blocks round-robin over the global mesh
+    (:func:`repro.launch.mesh.multihost_graph_mesh`) and a cross-host psum
+    combines the row partials. The continuous-batching submit path never
+    triggers it implicitly — collective execution cannot hide behind a
+    per-host scheduler.
+
+    Operational rule: a host PARKED INSIDE A COLLECTIVE cannot answer the
+    data plane — the pending collective occupies its device queue, so a
+    forwarded dispatch queues behind it and the ingress times out (then
+    fails over). Sequence phase changes over the data plane (a peer-server
+    op setting an Event, as the two-process test does), and only enter
+    collective phases once forwarding traffic has drained.
+    """
+
+    def __init__(
+        self,
+        *,
+        context: Optional[MultihostContext] = None,
+        directory: Optional[PlacementDirectory] = None,
+        peer_addresses: Optional[Mapping[int, Tuple[str, int]]] = None,
+        serve_port: Optional[int] = None,
+        peer_timeout_s: float = 120.0,
+        evict_after_failures: int = 3,
+        **engine_kw,
+    ):
+        if context is None:
+            context = MultihostContext(
+                process_index=0, process_count=1, coordinator=None,
+                local_devices=list(jax.local_devices()),
+                global_devices=list(jax.devices()))
+        self.context = context
+        self.process_index = context.process_index
+        self.process_count = context.process_count
+        if directory is None:
+            # homogeneous-fleet default: every rank assumed to carry this
+            # rank's device count (peer handshakes correct the table)
+            directory = PlacementDirectory([
+                HostInfo(p, context.n_local_devices, 0)
+                for p in range(context.process_count)])
+        self.directory = directory
+
+        super().__init__(devices=context.local_devices, **engine_kw)
+        # the inherited pool is sized for per-device launches; forwards to
+        # remote owners block on the network, so give them their own slots
+        self._pool.shutdown(wait=True)
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.n_devices + max(1, self.process_count - 1),
+            thread_name_prefix="fleet-dev")
+
+        ports = peer_ports()
+        if serve_port is None:
+            serve_port = ports.get(self.process_index, 0)
+        self.server = PeerServer(serve_port,
+                                 process_index=self.process_index,
+                                 epoch=context.epoch,
+                                 n_devices=context.n_local_devices)
+        self.server.register("serve", self._handle_peer_serve)
+        if peer_addresses is None:
+            peer_addresses = {r: ("127.0.0.1", p) for r, p in ports.items()
+                              if r != self.process_index}
+        self.peers: Dict[int, PeerClient] = {
+            int(r): PeerClient(tuple(addr), process_index=self.process_index,
+                               epoch=context.epoch, timeout_s=peer_timeout_s)
+            for r, addr in peer_addresses.items()
+            if int(r) != self.process_index}
+
+        # multihost counters (under the inherited _counters_lock)
+        self.forwarded_requests = 0
+        self.host_forwarded = [0] * self.process_count
+        self.remote_served = 0        # peer groups answered on their behalf
+        self.forward_busy_s = 0.0
+        self.host_failovers = 0
+        self.global_dispatches = 0
+        # consecutive transport failures per peer: a single slow request
+        # (socket timeout on a busy owner) serves locally but keeps the
+        # placements — only a PERSISTENT failure evicts the host
+        self.evict_after_failures = evict_after_failures
+        self._peer_failures: Dict[int, int] = {}
+
+    # ----------------------------------------------------------------- peers
+    def connect_peers(self) -> Dict[int, int]:
+        """Handshake every peer channel; the learned ``(rank, epoch,
+        n_devices)`` feed the directory (a bumped epoch invalidates the
+        restarted host's stale placements). Returns ``{rank: epoch}``.
+
+        Also the REJOIN path: calling it again after a peer was evicted
+        (persistent transport failure) re-announces the recovered host to
+        the directory — its ring arcs come back and its failure counter
+        resets. Note the rejoin is forward-looking: keys re-placed onto
+        survivors during the outage are STICKY there (their plans are
+        already resident); only unseen/invalidated keys land on the
+        recovered host's arcs again.
+        """
+        epochs: Dict[int, int] = {}
+        for rank, client in sorted(self.peers.items()):
+            peer_rank, peer_epoch = client.handshake()
+            epochs[peer_rank] = peer_epoch
+            self.directory.update_host(HostInfo(
+                peer_rank, client.peer_devices or self.n_devices,
+                peer_epoch))
+            with self._counters_lock:
+                self._peer_failures[peer_rank] = 0
+        return epochs
+
+    def _handle_peer_serve(self, payload: Dict) -> np.ndarray:
+        """Data-plane handler: a peer forwarded a fused request group we
+        own. It executes INLINE on this connection thread (an adopted,
+        never-enqueued work item) — queueing it behind our single flush
+        worker would deadlock two hosts forwarding to each other: A's
+        worker blocks on B's answer while B's worker blocks on A's. The
+        pinned-local marker keeps the item off the forwarding split even
+        if it ever re-enters a flush path."""
+        gid = payload["graph_id"]
+        x = jnp.asarray(payload["x"], dtype=jnp.float32)
+        self._validate(gid, x)
+        item = self.scheduler.adopt((gid, x, "pinned-local"))
+        try:
+            self._flush_items_locally([item])
+        finally:
+            if not item.done:   # dispatch raised (or forgot the item):
+                item.fail(RuntimeError(   # never leave the peer hanging
+                    f"peer dispatch left {gid!r} unanswered"))
+        out = np.asarray(item.future.result(timeout=0))
+        with self._counters_lock:
+            self.remote_served += 1
+        return out
+
+    def close(self) -> None:
+        super().close()               # drain the scheduler (may still forward)
+        for client in self.peers.values():
+            client.close()
+        self.server.close()
+
+    # ------------------------------------------------------------------ admin
+    def register_graph(self, graph_id: str, g: CSRGraph,
+                       normalize: bool = False) -> Optional[PartitionPlan]:
+        """Register a graph fleet-wide (call on EVERY host with the same
+        content — registration is symmetric, plan residency is not).
+
+        Only the directory-designated owner builds and stages the plan (on
+        the directory's device, pinned into the local cache); other hosts
+        record the binding and forward at serve time. Returns the plan on
+        the owner, None elsewhere.
+        """
+        if normalize:
+            g = gcn_normalize(g)
+        key = (graph_content_hash(g), self.config)
+        self._graphs[graph_id] = g
+        self._keys[graph_id] = key
+        placement = self.directory.place(key)
+        if placement.host != self.process_index:
+            return None
+        self.cache.pin(key, placement.device)
+        return self.cache.get_by_key(
+            key, lambda: build_partition_plan(g, self.config,
+                                              graph_hash=key[0]))
+
+    # ------------------------------------------------------------------ flush
+    def _flush(self, items: List[WorkItem]) -> None:
+        """Split the flush by owning host FIRST; the local share then runs
+        the inherited per-device concurrent path while remote shares
+        forward concurrently from the pool (one task per owner host)."""
+        if self.process_count <= 1 or not self.peers:
+            return super()._flush(items)
+        order, groups = self._group_by_graph(items)
+        local: List[WorkItem] = []
+        by_host: Dict[int, List[Tuple[str, List[WorkItem]]]] = {}
+        for gid in order:
+            grp = groups[gid]
+            if any(len(it.payload) > 2 for it in grp):
+                local.extend(grp)     # pinned by a peer forward: never bounce
+                continue
+            placement = self.directory.place(self._keys[gid])
+            if (placement.host == self.process_index
+                    or placement.host not in self.peers):
+                local.extend(grp)
+            else:
+                by_host.setdefault(placement.host, []).append((gid, grp))
+
+        futs = [self._pool.submit(self._forward_host, host, host_groups)
+                for host, host_groups in sorted(by_host.items())]
+        first_exc: Optional[BaseException] = None
+        if local:
+            try:
+                super()._flush(local)
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                first_exc = e
+        for f in futs:
+            try:
+                f.result()
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                if first_exc is None:
+                    first_exc = e
+        if first_exc is not None:
+            raise first_exc
+
+    def _forward_host(self, host: int,
+                      host_groups: List[Tuple[str, List[WorkItem]]]) -> None:
+        """Forward one owner host's graph groups over its peer channel.
+
+        Same fusion as a local dispatch: one request per graph group, the
+        feature axis concatenated, the answer sliced back per item. A
+        TRANSPORT failure serves the unanswered items locally (failover)
+        and, only after ``evict_after_failures`` CONSECUTIVE failures,
+        evicts the host from the directory (stale-host eviction;
+        survivors inherit its keys — ``connect_peers`` re-admits a
+        recovered host). A remote execution error propagates as-is.
+        """
+        t0 = time.perf_counter()
+        client = self.peers[host]
+        try:
+            for gid, grp in host_groups:
+                feats = [np.asarray(it.payload[1], dtype=np.float32)
+                         for it in grp]
+                widths = [int(f.shape[1]) for f in feats]
+                fused = (feats[0] if len(feats) == 1
+                         else np.concatenate(feats, axis=1))
+                out = jnp.asarray(client.request(
+                    "serve", {"graph_id": gid, "x": fused}))
+                with self._counters_lock:
+                    self._peer_failures[host] = 0
+                answers, wait_s = self._slice_answers(
+                    grp, widths, out, time.perf_counter())
+                n_rows = int(out.shape[0])
+                with self._counters_lock:
+                    self.forwarded_requests += len(grp)
+                    self.host_forwarded[host] += len(grp)
+                    self.requests_served += len(grp)
+                    self.rows_served += n_rows * len(grp)
+                    self.values_served += n_rows * sum(widths)
+                    self.total_request_latency_s += wait_s
+                for item, result in answers:
+                    item.complete(result)
+        except ConnectionError:
+            # serve the stragglers here either way; only a PERSISTENT
+            # failure drops the host from the ring (one slow answer must
+            # not permanently split the fleet — the placements stay, so
+            # the next flush retries the forward)
+            with self._counters_lock:
+                self.host_failovers += 1
+                n_fail = self._peer_failures.get(host, 0) + 1
+                self._peer_failures[host] = n_fail
+            if n_fail >= self.evict_after_failures:
+                try:
+                    self.directory.evict_host(host)
+                except ValueError:
+                    pass               # already the last host standing
+            stragglers = [it for _, grp in host_groups for it in grp
+                          if not it.done]
+            if stragglers:
+                self._flush_items_locally(stragglers)
+        finally:
+            dt = time.perf_counter() - t0
+            with self._counters_lock:
+                self.forward_busy_s += dt
+
+    # ----------------------------------------------------------------- global
+    def serve_global(self, graph_id: str, x: jax.Array) -> jax.Array:
+        """COLLECTIVE whole-fleet dispatch of one graph (SPMD contract:
+        every process calls with identical arguments, in the same order
+        relative to its other serve_global calls).
+
+        Routes over the GLOBAL device count: when the dispatch
+        block-shards (giant narrow graph), the blocks round-robin over
+        every host's devices and the psum crosses hosts — fleet capacity
+        for a single graph becomes the sum of every host's memory. A
+        dispatch that routes "single" falls back to the local serving
+        path on every host (identical answers, no collective).
+        """
+        plan = self.plan_for(graph_id)
+        gmesh = multihost_graph_mesh()
+        n_global = int(gmesh.devices.size)
+        fd = route_fleet(
+            plan.n_cols, int(x.shape[1]), int(plan.slabs["C"]),
+            int(plan.slabs["R"]), plan.num_blocks, n_global,
+            min_blocks_per_device=self.min_blocks_per_device,
+            n_hosts=self.process_count)
+        if fd.strategy != "block" or self.process_count <= 1:
+            return self.serve_one(graph_id, x)
+        t0 = time.perf_counter()
+        prep = self._shard_prepared("block", plan, n_global)
+        # commit the (immutable) slabs to the global sharding ONCE per
+        # plan; later global dispatches of the same graph reuse them
+        with self._prep_lock:
+            committed = prep.get("global_args")
+        if committed is None:
+            committed = commit_block_shards_global(prep["args"], gmesh)
+            with self._prep_lock:
+                prep["global_args"] = committed
+        out, live = spmm_block_sharded(
+            plan.slabs, x, plan.n_rows, gmesh,
+            prepared=(committed, prep["live"]))
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        out = jnp.asarray(np.asarray(out)[prep["inv_np"]])
+        with self._counters_lock:
+            self.global_dispatches += 1
+            self.sharded_dispatches["block"] += 1
+            self.sharded_busy_s += dt
+            self.last_fleet_decision = fd
+            self.last_block_counts = [int(c) for c in live]
+            self._note_window_locked(t0, dt)
+        return out
+
+    # ------------------------------------------------------------------ stats
+    def _stats_locked(self, s: Dict[str, float]) -> Dict[str, float]:
+        s = super()._stats_locked(s)
+        s.update(
+            fleet_process_index=self.process_index,
+            fleet_hosts=self.process_count,
+            fleet_forwarded=self.forwarded_requests,
+            fleet_host_forwarded=list(self.host_forwarded),
+            fleet_remote_served=self.remote_served,
+            fleet_forward_busy_s=self.forward_busy_s,
+            fleet_host_failovers=self.host_failovers,
+            fleet_global_dispatches=self.global_dispatches,
+        )
+        for k, v in self.directory.stats().items():
+            s[f"fleet_dir_{k}"] = v
         return s

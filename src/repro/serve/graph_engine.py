@@ -250,16 +250,35 @@ class GraphServeEngine:
     def _group_by_graph(items: List[WorkItem]
                         ) -> Tuple[List[str], Dict[str, List[WorkItem]]]:
         """Group a flush's items by graph id, in order of first appearance
-        (shared with the fleet engine's flush)."""
+        (shared with the fleet engines' flushes). Payloads are
+        ``(graph_id, x, ...)`` — extra elements (the multihost engine's
+        pinned-local marker) ride along untouched."""
         order: List[str] = []
         groups: Dict[str, List[WorkItem]] = {}
         for item in items:
-            gid, _ = item.payload
+            gid = item.payload[0]
             if gid not in groups:
                 groups[gid] = []
                 order.append(gid)
             groups[gid].append(item)
         return order, groups
+
+    @staticmethod
+    def _slice_answers(grp: List[WorkItem], widths: List[int],
+                       out: jax.Array, now: float
+                       ) -> Tuple[List[Tuple[WorkItem, jax.Array]], float]:
+        """Split a fused group's output back per request: feature columns
+        sliced by each item's width, plus the summed enqueue->now wait.
+        Shared by the local, sharded, and forwarded dispatch paths so the
+        fusion/latency semantics cannot diverge between them."""
+        answers: List[Tuple[WorkItem, jax.Array]] = []
+        col = 0
+        wait_s = 0.0
+        for item, w in zip(grp, widths):
+            answers.append((item, out[:, col:col + w]))
+            col += w
+            wait_s += now - item.t_enqueue
+        return answers, wait_s
 
     def _flush(self, items: List[WorkItem]) -> None:
         """Scheduler flush callback: group by plan, fuse, dispatch in chunks.
@@ -332,14 +351,12 @@ class GraphServeEngine:
         wait_s = 0.0
         for (gid, grp, plan), out, widths in zip(batch, outs, col_splits):
             out = out[plan.inv_perm]          # back to original row order
-            col = 0
-            for item, w in zip(grp, widths):
-                answers.append((item, out[:, col:col + w]))
-                col += w
-                n_req += 1
-                n_rows += plan.n_rows
-                n_vals += plan.n_rows * w
-                wait_s += now - item.t_enqueue
+            sliced, wait = self._slice_answers(grp, widths, out, now)
+            answers.extend(sliced)
+            n_req += len(grp)
+            n_rows += plan.n_rows * len(grp)
+            n_vals += plan.n_rows * sum(widths)
+            wait_s += wait
         # only the increments sit under the lock (concurrent fleet device
         # launches must not serialize their un-permute/slice work on it)
         with self._counters_lock:

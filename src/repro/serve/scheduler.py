@@ -54,6 +54,7 @@ Tuning knobs:
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from collections import deque
@@ -68,17 +69,36 @@ class QueueFullError(RuntimeError):
 
 
 def percentile(sorted_vals: Sequence[float], q: float) -> float:
-    """Nearest-rank percentile of an already-sorted sequence (0 <= q <= 1)."""
+    """Nearest-rank percentile of an already-sorted sequence (0 <= q <= 1).
+
+    Nearest-rank index is ``ceil(q * n) - 1`` (clamped): the q-quantile is
+    the smallest value with at least ``q * n`` values at or below it, so
+    ``percentile([1, 2, 3, 4], 0.5) == 2.0`` (not 3.0 — the old ``int(q*n)``
+    index sat one rank high for every q that is not an exact rank boundary).
+    ``q=0`` returns the minimum, ``q=1`` the maximum, a singleton its only
+    element.
+    """
     if not sorted_vals:
         return 0.0
-    idx = min(len(sorted_vals) - 1, max(0, int(q * len(sorted_vals))))
+    n = len(sorted_vals)
+    idx = min(n - 1, max(0, math.ceil(q * n) - 1))
     return float(sorted_vals[idx])
 
 
 class WorkItem:
-    """One admitted request: payload, future, and latency bookkeeping."""
+    """One admitted request: payload, future, and latency bookkeeping.
 
-    __slots__ = ("payload", "future", "t_enqueue", "t_done", "_sched")
+    A caller may ``.cancel()`` the returned future at any moment, including
+    while the flush thread is mid-``complete``. Both answer paths therefore
+    *claim* the future atomically first (``set_running_or_notify_cancel``,
+    which holds the Future's own lock): whoever wins the race settles the
+    item exactly once, the loser is a silent no-op, and a lost race against
+    a cancel is recorded in the scheduler's ``cancelled`` counter — never an
+    ``InvalidStateError`` that would poison the rest of the flush.
+    """
+
+    __slots__ = ("payload", "future", "t_enqueue", "t_done", "_sched",
+                 "_settled")
 
     def __init__(self, payload: Any, sched: "BatchScheduler"):
         self.payload = payload
@@ -86,6 +106,9 @@ class WorkItem:
         self.t_enqueue = time.perf_counter()
         self.t_done: Optional[float] = None
         self._sched = sched
+        self._settled = False   # some claim attempt already concluded this
+        #                         item (fast path only; the Future's own
+        #                         lock remains the arbiter)
 
     @property
     def done(self) -> bool:
@@ -96,16 +119,45 @@ class WorkItem:
         """Enqueue -> answer wall time (queue wait included); None until done."""
         return None if self.t_done is None else self.t_done - self.t_enqueue
 
+    def _claim(self) -> bool:
+        """Atomically win (or lose) the settle race against ``Future.cancel``.
+
+        Returns True when this thread now owns the only right to settle the
+        future (``cancel()`` can no longer succeed). Returns False when the
+        item is already settled/claimed, or when the caller's cancel won —
+        the latter is counted exactly once (the CANCELLED -> NOTIFIED
+        transition happens on one thread only).
+        """
+        # fast path: an already-concluded item (answered, or a cancel we
+        # already recorded) — skips the stdlib's CRITICAL "unexpected
+        # state" log that set_running_or_notify_cancel emits on settled
+        # futures; pure optimization, the Future's lock decides below
+        if self._settled or (self.future.done()
+                             and not self.future.cancelled()):
+            return False
+        try:
+            claimed = self.future.set_running_or_notify_cancel()
+        except RuntimeError:
+            self._settled = True
+            return False            # already answered (double complete/fail)
+        if not claimed:             # caller's cancel() won the race
+            self._settled = True
+            self._sched._record_cancelled(self)
+            return False
+        self._settled = True
+        return True
+
     def complete(self, result: Any) -> None:
-        """Resolve the item's future and record its latency."""
-        if self.future.done():
+        """Resolve the item's future and record its latency (idempotent;
+        swallows a lost race against a caller-side ``cancel()``)."""
+        if not self._claim():
             return
         self.t_done = time.perf_counter()
         self._sched._record_done(self, failed=False)
         self.future.set_result(result)
 
     def fail(self, exc: BaseException) -> None:
-        if self.future.done():
+        if not self._claim():
             return
         self.t_done = time.perf_counter()
         self._sched._record_done(self, failed=True)
@@ -162,7 +214,10 @@ class BatchScheduler:
         self.submitted = 0
         self.completed = 0
         self.failed = 0
-        self.rejected = 0            # QueueFullError admissions
+        self.cancelled = 0           # caller-side Future.cancel() wins;
+        #                              completed + failed + cancelled
+        #                              == settled submissions
+        self.rejected = 0            # QueueFullError admissions (per ITEM)
         self.flushes = 0
         self.items_flushed = 0
         self.mid_flush_admissions = 0  # items pulled by take_ready
@@ -252,29 +307,43 @@ class BatchScheduler:
             self._ensure_started_locked()
             return self._enqueue_locked(payload)
 
-    def submit_many(self, payloads: Sequence[Any], *,
-                    block: bool = True) -> List[WorkItem]:
+    def submit_many(self, payloads: Sequence[Any], *, block: bool = True,
+                    timeout: Optional[float] = None) -> List[WorkItem]:
         """Atomically admit several payloads: they enter the queue as one
         contiguous run, so a single flush sees them together (this is what
         keeps the synchronous ``serve(requests)`` wrapper's batching
         semantics). Blocks until the whole run fits — or, when the run is
         larger than ``max_queue``, until the queue is empty (the run is
         then admitted as an oversized burst rather than deadlocking).
+
+        A rejection (``block=False`` or an expired ``timeout``, matching
+        :meth:`submit`) rejects the whole run and counts EVERY item of it in
+        ``rejected`` — the counter tracks items, not calls, so it stays
+        comparable with ``submitted`` no matter how admissions were batched.
         """
         payloads = list(payloads)
         if not payloads:
             return []
+        deadline = None if timeout is None else time.perf_counter() + timeout
         with self._cond:
             self._ensure_started_locked()
             need = len(payloads)
             while (len(self._queue) + need > self.max_queue
                    and len(self._queue) > 0):
                 if not block:
-                    self.rejected += 1
+                    self.rejected += need
                     raise QueueFullError(
                         f"{self.name}: no room for {need} items "
                         f"(queue {len(self._queue)}/{self.max_queue})")
-                self._cond.wait()
+                remaining = (None if deadline is None
+                             else deadline - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    self.rejected += need
+                    raise QueueFullError(
+                        f"{self.name}: no room for {need} items "
+                        f"(queue {len(self._queue)}/{self.max_queue}) "
+                        f"after {timeout}s")
+                self._cond.wait(remaining)
             # the wait may have outlived a stop(): re-ensure a live worker
             self._ensure_started_locked()
             return [self._enqueue_locked(p) for p in payloads]
@@ -286,6 +355,24 @@ class BatchScheduler:
         self.peak_queue_depth = max(self.peak_queue_depth, len(self._queue))
         self._cond.notify_all()
         return item
+
+    def adopt(self, payload: Any) -> WorkItem:
+        """Create an item counted as submitted but NOT enqueued — the
+        caller dispatches it directly on its own thread.
+
+        This exists for work that must not wait behind the single flush
+        worker: the multihost peer handler executes forwarded groups
+        inline, because host A's worker blocks on B's answer while B's
+        worker may be blocked on A's — two single-worker schedulers
+        queueing each other's forwards through the data plane is a
+        deadlock. Adopted items feed the same counters through
+        ``complete``/``fail``/cancel, so ``completed + failed + cancelled
+        == submitted`` still holds.
+        """
+        with self._cond:
+            item = WorkItem(payload, self)
+            self.submitted += 1
+            return item
 
     def take_ready(self, k: int) -> List[WorkItem]:
         """Non-blocking pop of up to ``k`` queued items into the RUNNING
@@ -346,9 +433,13 @@ class BatchScheduler:
                 exc = e                    # worker; every waiter gets the exc
             fallback = exc or RuntimeError(
                 f"{self.name}: flush returned without answering item")
+            # unconditional fail (no done-check): fail() itself settles the
+            # check-then-settle race atomically, so a cancel landing between
+            # a guard and the settle can no longer raise InvalidStateError
+            # here and kill the worker thread; already-answered items are
+            # no-ops, cancelled-but-unanswered items are counted as such
             for item in batch + self._current_extra:
-                if not item.done:
-                    item.fail(fallback)
+                item.fail(fallback)
 
     # ------------------------------------------------------------ stats
     def _record_done(self, item: WorkItem, *, failed: bool) -> None:
@@ -360,6 +451,17 @@ class BatchScheduler:
             if item.latency_s is not None:
                 self._latencies.append(item.latency_s)
                 self._total_latency_s += item.latency_s
+
+    def _record_cancelled(self, item: WorkItem) -> None:
+        """A caller's ``Future.cancel()`` beat the flush to this item.
+
+        Called exactly once per cancelled item — from the one thread that
+        observed the CANCELLED -> CANCELLED_AND_NOTIFIED transition — so
+        ``completed + failed + cancelled`` accounts for every item a flush
+        attempted to answer, without double counting.
+        """
+        with self._cond:
+            self.cancelled += 1
 
     def queue_depth(self) -> int:
         with self._cond:
@@ -374,6 +476,7 @@ class BatchScheduler:
                 "submitted": self.submitted,
                 "completed": self.completed,
                 "failed": self.failed,
+                "cancelled": self.cancelled,
                 "rejected": self.rejected,
                 "flushes": self.flushes,
                 "items_flushed": self.items_flushed,

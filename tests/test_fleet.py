@@ -171,6 +171,32 @@ def test_route_fleet_strategies():
     assert fd.strategy == "single"
 
 
+def test_route_fleet_multihost():
+    """n_hosts > 1 routes over the GLOBAL mesh: block sharding spans hosts
+    (psum returns a replicated answer), feature sharding is disabled
+    (column-sharded output would pay a cross-host gather per answer)."""
+    # narrow giant over 2 hosts x 4 devices: block-shard the global mesh
+    fd = route_fleet(20_000, 16, 64, 32, num_blocks=169, n_devices=8,
+                     n_hosts=2)
+    assert fd.strategy == "block" and fd.n_hosts == 2
+    assert fd.n_devices == 8
+    assert "host" in fd.describe()
+    # wide features, multi-host: NOT feature-sharded — stays single
+    fd = route_fleet(500, 8 * 128, 64, 32, num_blocks=6, n_devices=8,
+                     n_hosts=2)
+    assert fd.strategy == "single"
+    # same shape on one host still feature-shards (unchanged behavior)
+    fd = route_fleet(500, 8 * 128, 64, 32, num_blocks=6, n_devices=8,
+                     n_hosts=1)
+    assert fd.strategy == "feature" and fd.n_hosts == 1
+    # too few blocks for the global device count: single
+    fd = route_fleet(20_000, 16, 64, 32, num_blocks=16, n_devices=8,
+                     n_hosts=2)
+    assert fd.strategy == "single"
+    with pytest.raises(ValueError):
+        route_fleet(500, 16, 64, 32, num_blocks=6, n_devices=8, n_hosts=0)
+
+
 # ------------------------------------------------------- sharded dispatch
 def test_feature_sharded_matches_blocked():
     g, plan = _plan()

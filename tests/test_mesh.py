@@ -1,8 +1,8 @@
-"""launch/mesh: host-mesh validation errors + the fleet graph mesh."""
+"""launch/mesh: host-mesh validation errors + the fleet graph meshes."""
 import jax
 import pytest
 
-from repro.launch.mesh import graph_mesh, make_host_mesh
+from repro.launch.mesh import graph_mesh, make_host_mesh, multihost_graph_mesh
 
 
 def test_make_host_mesh_default():
@@ -30,6 +30,16 @@ def test_graph_mesh_default_spans_all_devices():
     mesh = graph_mesh()
     assert mesh.axis_names == ("dev",)
     assert mesh.devices.size == len(jax.devices())
+
+
+def test_multihost_graph_mesh_single_process_degenerates():
+    """On one process the global mesh == graph_mesh(): every visible
+    device on one flat 'dev' axis (the 2-process case is covered by the
+    subprocess test in test_multihost.py)."""
+    mesh = multihost_graph_mesh()
+    assert mesh.axis_names == ("dev",)
+    assert mesh.devices.size == len(jax.devices())
+    assert list(mesh.devices.flat) == list(graph_mesh().devices.flat)
 
 
 def test_graph_mesh_prefix_and_bounds():

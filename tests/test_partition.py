@@ -23,12 +23,17 @@ def _graph(n, seed, zipf=1.7):
 def test_patterns_paper_invariants(mbw, mwn):
     p = get_partition_patterns(mbw, mwn, mode="paper")
     assert p.deg_bound == mbw * mwn
-    for d in range(1, p.deg_bound):
+    # table covers 1 .. deg_bound INCLUSIVE: f*mwn >= d admits the boundary
+    for d in range(1, p.deg_bound + 1):
         f, br, wn = int(p.factor[d]), int(p.block_rows[d]), int(p.warp_nzs[d])
         assert mbw % f == 0 and br == mbw // f          # factor divides warps
         assert f * mwn >= d                              # Algorithm 1 guard
         assert wn == -(-d // f)                          # ceil(d / factor)
         assert br * d <= p.deg_bound                     # block capacity bound
+    # boundary degree: handled by the largest factor as ONE ordinary block
+    assert int(p.factor[p.deg_bound]) == mbw
+    assert int(p.block_rows[p.deg_bound]) == 1
+    assert int(p.warp_nzs[p.deg_bound]) == mwn
 
 
 @pytest.mark.parametrize("mode", ["paper", "tpu"])
@@ -64,7 +69,7 @@ def test_partition_covers_all_nnz(n, seed, mode, mbw, mwn):
         covered[r0:r0 + nr] += 1
     deg = np.diff(g.rowptr)
     bound = pats.deg_bound
-    assert np.all(covered[(deg > 0) & (deg < bound)] == 1)
+    assert np.all(covered[(deg > 0) & (deg <= bound)] == 1)
     assert np.all(covered[deg == 0] == 0)
 
 
@@ -75,12 +80,16 @@ def test_split_rows_capacity(n, seed):
     pats = get_partition_patterns(4, 8, mode="paper")   # tiny bound = 32
     bp = block_level_partition(g, pats)
     assert np.all(bp.nnz_blk <= pats.deg_bound)
-    # split blocks of one row are consecutive and sum to the row degree
+    # only degrees STRICTLY past the bound split (deg == bound is one
+    # ordinary pattern block); split blocks of one row are consecutive and
+    # sum to the row degree
     deg = np.diff(g.rowptr)
-    for r in np.flatnonzero(deg >= pats.deg_bound):
+    for r in np.flatnonzero(deg > pats.deg_bound):
         blocks = np.flatnonzero((bp.meta[:, 2] == r) & bp.is_split)
         assert int(bp.nnz_blk[blocks].sum()) == deg[r]
         assert np.all(np.diff(blocks) == 1)
+    for r in np.flatnonzero(deg == pats.deg_bound):
+        assert not np.any((bp.meta[:, 2] == r) & bp.is_split)
 
 
 # ---------------------------------------------------------------------------
@@ -105,6 +114,57 @@ def test_balance_tpu_mode_beats_warp_level():
     wp = warp_level_partition(g, 32)
     bs, ws = balance_stats(bp), balance_stats(wp)
     assert bs["metadata_bytes"] < ws["metadata_bytes"]
+
+
+@pytest.mark.parametrize("mode", ["paper", "tpu"])
+def test_boundary_degree_pattern_path_and_kernel_parity(mode):
+    """Rows with deg in {bound-1, bound, bound+1}: exactly-bound rows take
+    the pattern path (single block, slab filled to capacity), only
+    bound+1 splits — and both kernel backends agree with the dense oracle
+    across the boundary."""
+    import jax.numpy as jnp
+    from repro.kernels.ops import spmm_blocked, spmm_pallas
+
+    mbw, mwn = 4, 8
+    bound = mbw * mwn                      # 32
+    degs = [bound - 1, bound, bound + 1, bound, 3]   # mixed boundary classes
+    n = max(degs) + 2                      # enough distinct columns per row
+    src = np.concatenate([np.full(d, r) for r, d in enumerate(degs)])
+    dst = np.concatenate([np.arange(d) for d in degs])
+    rng = np.random.default_rng(0)
+    g = degree_sort_csr(csr_from_edges(
+        src, dst, n, values=rng.normal(size=len(src)).astype(np.float32)))
+
+    pats = get_partition_patterns(mbw, mwn, mode=mode)
+    bp = block_level_partition(g, pats)
+    deg = np.diff(g.rowptr)
+    for r in np.flatnonzero(deg == bound):
+        mine = np.flatnonzero(bp.meta[:, 2] == r)
+        # ONE ordinary block, not split, slab filled exactly to capacity
+        own = [b for b in mine if not bp.is_split[b]
+               and r < bp.meta[b, 2] + bp.n_rows_blk[b]]
+        assert len(own) == 1 and not bp.is_split[own[0]]
+        assert int(bp.nnz_blk[own[0]]) == bound
+    for r in np.flatnonzero(deg == bound + 1):
+        blocks = np.flatnonzero((bp.meta[:, 2] == r) & bp.is_split)
+        assert len(blocks) == 2            # bound + 1 nzs -> two split blocks
+    assert np.all(bp.is_split[bp.meta[:, 0] <= bound] == False)  # noqa: E712
+
+    # parity through pack_slabs and BOTH kernel backends vs dense oracle
+    slabs = pack_slabs(g, bp)
+    x = jnp.asarray(rng.normal(size=(g.n_cols, 8)), jnp.float32)
+    ref = g.to_dense() @ np.asarray(x)
+    out_blocked = spmm_blocked(
+        jnp.asarray(slabs["colidx"]), jnp.asarray(slabs["values"]),
+        jnp.asarray(slabs["rowloc"]), jnp.asarray(slabs["out_row"]),
+        x, g.n_rows)
+    np.testing.assert_allclose(np.asarray(out_blocked), ref,
+                               atol=1e-4, rtol=1e-4)
+    jslabs = {k: (jnp.asarray(v) if isinstance(v, np.ndarray) else v)
+              for k, v in slabs.items()}
+    out_pallas = spmm_pallas(jslabs, x, g.n_rows, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_pallas), ref,
+                               atol=1e-4, rtol=1e-4)
 
 
 def test_pack_slabs_every_nz_exactly_once():

@@ -191,9 +191,25 @@ def test_take_ready_items_fail_with_flush_exception():
     sched.stop()
 
 
-def test_latency_percentiles_and_validation():
+def test_percentile_nearest_rank():
+    """Nearest-rank index is ceil(q*n)-1 — the old int(q*n) sat one rank
+    high (p50 of [1,2,3,4] came back 3)."""
     assert percentile([], 0.5) == 0.0
-    assert percentile([1.0, 2.0, 3.0, 4.0], 0.5) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.5) == 2.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.0) == 1.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 1.0) == 4.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.75) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.76) == 4.0
+    assert percentile([7.0], 0.0) == 7.0
+    assert percentile([7.0], 0.5) == 7.0
+    assert percentile([7.0], 1.0) == 7.0
+    # p99 of 100 sorted values is the 99th (index 98), not the maximum
+    vals = [float(i) for i in range(1, 101)]
+    assert percentile(vals, 0.99) == 99.0
+    assert percentile(vals, 0.5) == 50.0
+
+
+def test_latency_percentiles_and_validation():
     rec = Recorder()
     sched = BatchScheduler(rec, max_batch=2, max_wait_ms=1, max_queue=8)
     items = sched.submit_many(list(range(6)))
@@ -209,6 +225,130 @@ def test_latency_percentiles_and_validation():
         BatchScheduler(rec, max_queue=0)
     with pytest.raises(ValueError):
         BatchScheduler(rec, max_wait_ms=-1)
+
+
+def test_cancel_mid_flush_does_not_poison_cobatched_requests():
+    """A caller cancelling its future while the flush is answering the batch
+    must not fail the OTHER items of that flush (the old check-then-set
+    window raised InvalidStateError inside the flush callback)."""
+    def flush(items):
+        # deterministic lost race: the "caller" cancels item 1 after the
+        # flush picked up the batch but before it answers anything
+        if len(items) > 1:
+            items[1].future.cancel()
+        for it in items:
+            it.complete(("done", it.payload))
+
+    sched = BatchScheduler(flush, max_batch=4, max_wait_ms=10_000, max_queue=8)
+    items = sched.submit_many(["a", "b", "c", "d"])
+    for i in (0, 2, 3):
+        assert items[i].future.result(timeout=10) == ("done", items[i].payload)
+    assert items[1].future.cancelled()
+    st = sched.stats()
+    assert st["cancelled"] == 1
+    assert st["completed"] == 3 and st["failed"] == 0
+    assert st["completed"] + st["failed"] + st["cancelled"] == st["submitted"]
+    sched.stop()
+
+
+def test_cancel_during_straggler_fail_does_not_kill_worker():
+    """The post-flush straggler loop must survive a cancel racing it: a
+    flush that leaves items unanswered AND sees them cancelled must not
+    leak InvalidStateError out of _worker (which silently killed the
+    thread and hung every later submit)."""
+    def forgetful(items):
+        for it in items[1:]:
+            it.future.cancel()      # cancelled AND unanswered stragglers
+        items[0].complete("answered")
+
+    sched = BatchScheduler(forgetful, max_batch=3, max_wait_ms=1, max_queue=8)
+    items = sched.submit_many(["a", "b", "c"])
+    assert items[0].future.result(timeout=10) == "answered"
+    for it in items[1:]:
+        assert it.future.cancelled()
+    # the worker must still be alive to serve this
+    again = sched.submit("again")
+    assert again.future.result(timeout=10) == "answered"
+    st = sched.stats()
+    assert st["cancelled"] == 2
+    assert st["completed"] + st["failed"] + st["cancelled"] == st["submitted"]
+    sched.stop()
+
+
+def test_cancel_hammer_invariant_and_worker_survival():
+    """Hammer thread cancels futures mid-flush while traffic flows: no
+    InvalidStateError may escape, every non-cancelled item resolves, and
+    completed + failed + cancelled == submitted at quiesce."""
+    def flush(items):
+        time.sleep(0.001)           # widen the cancel window
+        for it in items:
+            it.complete(("done", it.payload))
+
+    sched = BatchScheduler(flush, max_batch=4, max_wait_ms=0.5, max_queue=512)
+    all_items, items_lock = [], threading.Lock()
+    stop_hammer = threading.Event()
+
+    def hammer():
+        i = 0
+        while not stop_hammer.is_set():
+            with items_lock:
+                pending = [it for it in all_items if not it.future.done()]
+            for it in pending[i % 2::2]:    # alternate halves
+                it.future.cancel()
+            i += 1
+            time.sleep(0.0005)
+
+    hammer_t = threading.Thread(target=hammer)
+    hammer_t.start()
+    try:
+        for round_ in range(30):
+            items = sched.submit_many(list(range(8)))
+            with items_lock:
+                all_items.extend(items)
+            time.sleep(0.002)
+    finally:
+        stop_hammer.set()
+        hammer_t.join(timeout=10)
+    # quiesce: every item must reach a terminal state
+    for it in all_items:
+        if not it.future.cancelled():
+            assert it.future.result(timeout=10)[0] == "done"
+    sched.stop(timeout=10)
+    st = sched.stats()
+    assert st["completed"] + st["failed"] + st["cancelled"] == st["submitted"]
+    assert st["failed"] == 0, "cancel races must not fail co-batched items"
+    assert st["submitted"] == 240
+    # the worker survived the whole hammer session
+    again = sched.submit("alive")
+    assert again.future.result(timeout=10) == ("done", "alive")
+    sched.stop()
+
+
+def test_submit_many_counts_rejected_items_and_times_out():
+    """submit_many parity with submit: a rejected run counts every ITEM in
+    `rejected` (not 1 per call), and timeout= raises QueueFullError after
+    the deadline instead of blocking forever."""
+    gate = threading.Event()
+    rec = Recorder(gate=gate)
+    sched = BatchScheduler(rec, max_batch=1, max_wait_ms=0, max_queue=2)
+    first = sched.submit("a")
+    assert rec.entered.wait(10.0)   # worker gated: queue can only grow
+    while sched.queue_depth() < 2:
+        sched.submit("fill", block=False)
+    with pytest.raises(QueueFullError):
+        sched.submit_many(["x", "y", "z"], block=False)
+    assert sched.stats()["rejected"] == 3
+    t0 = time.perf_counter()
+    with pytest.raises(QueueFullError):
+        sched.submit_many(["x", "y"], timeout=0.05)
+    assert time.perf_counter() - t0 < 5.0
+    assert sched.stats()["rejected"] == 5
+    gate.set()
+    assert first.future.result(timeout=10) == ("done", "a")
+    items = sched.submit_many(["p", "q"], timeout=10)
+    for it in items:
+        assert it.future.result(timeout=10)[0] == "done"
+    sched.stop()
 
 
 def test_restart_after_stop():
