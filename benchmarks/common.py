@@ -2,14 +2,12 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import gcn_normalize
-from repro.core.spmm import make_accel_spmm
 from repro.data.graphs import BENCHMARK_GRAPHS, make_power_law_graph
 
 

@@ -7,8 +7,6 @@ identical FLOPs, and no token is dropped.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from .common import csv_row, time_call
 
 

@@ -29,7 +29,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
 
 
 def _roofline_rows():

@@ -32,7 +32,6 @@ import threading
 import time
 from typing import Dict, List
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -16,7 +16,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax  # noqa: E402
+import jax  # noqa: E402, F401 — imported early so backend init happens once
 
 
 VARIANTS = {
@@ -57,10 +57,12 @@ def apply_flags(flags):
         R.shard_heads_impl = R.shard_heads
         # monkeypatch to no-op; restored per-process (one variant per process)
         import repro.sharding as S
-        noop = lambda x, head_axis=2, dim_axis=3: x
+
+        def noop(x, head_axis=2, dim_axis=3):
+            return x
         R.shard_heads = noop
         S.shard_heads = noop
-        from repro.models import attention as A2  # rebind late import site
+        from repro.models import attention as A2  # noqa: F401 — rebind late import site
         # attention imports shard_heads lazily inside _project_qkv, so the
         # rules-module patch is sufficient.
 

@@ -288,6 +288,14 @@ class PlanCache:
                 with self._lock:
                     self.spills += 1
 
+    def remove(self, key) -> bool:
+        """Drop one plan WITHOUT spilling it (replica demotion: another
+        resident copy — and possibly a spilled .npz — still exists
+        elsewhere). Returns True if the key was resident. Not counted as
+        an eviction: the caller chose to drop it, capacity didn't."""
+        with self._lock:
+            return self._plans.pop(key, None) is not None
+
     def clear(self) -> None:
         with self._lock:
             self._plans.clear()

@@ -12,6 +12,9 @@ Four layers (ISSUE 4 "shard hot plans across devices" + ISSUE 5 cross-host):
   level above: ``plan_key -> (host, device)`` across a multi-process fleet
   (consistent-hash over every host's device slots, epoch-stamped entries,
   stale-host eviction);
+* :mod:`repro.distributed.replication` — :class:`ReplicaManager`, EWMA
+  request-rate tracking driving hot-plan replica promotion/demotion (the
+  AWB-GCN runtime-rebalancing idea applied to the placement layer);
 * :mod:`repro.distributed.multihost` — ``jax.distributed`` rendezvous,
   the TCP forwarding data plane (:class:`PeerServer`/:class:`PeerClient`),
   and the CPU-only multi-subprocess CI harness (:func:`run_cpu_fleet`).
@@ -30,6 +33,7 @@ from .multihost import (
     run_cpu_fleet,
 )
 from .placement import ConsistentHashRing, FleetPlanCache
+from .replication import EwmaRate, ReplicaManager
 from .shard_spmm import (
     prepare_block_shards,
     prepare_feature_shards,
@@ -40,8 +44,10 @@ from .shard_spmm import (
 
 __all__ = [
     "ConsistentHashRing",
+    "EwmaRate",
     "FleetPlanCache",
     "HostInfo",
+    "ReplicaManager",
     "MultihostContext",
     "PeerClient",
     "PeerServer",

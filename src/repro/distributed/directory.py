@@ -30,6 +30,13 @@ Placement policy (mirroring ``FleetPlanCache``, one level up):
   re-placed on next lookup. :meth:`evict_host` removes a host from the
   ring entirely (crash, drain): its keys re-place onto the survivors,
   everyone else's arcs stay put (the consistent-hashing property).
+* **replica sets** — a hot plan may be staged on several slots at once:
+  :meth:`add_replica` / :meth:`remove_replica` maintain an ordered replica
+  list per key (the primary owner first), each replica epoch-stamped like
+  a primary entry. Losing the primary (epoch bump, host eviction) PROMOTES
+  the first surviving replica instead of dropping the key — evicting one
+  replica never discards the plan's other replicas — and :meth:`replicas`
+  returns only live replicas, lazily scrubbing stale ones.
 """
 from __future__ import annotations
 
@@ -94,6 +101,9 @@ class PlacementDirectory:
         self._hosts: Dict[int, HostInfo] = {
             h.process_index: h for h in hosts}
         self._entries: Dict[object, Placement] = {}
+        # extra replicas beyond the primary owner, insertion-ordered; the
+        # full replica set of a key is [primary] + _replica_entries[key]
+        self._replica_entries: Dict[object, List[Placement]] = {}
         self._slots: List[Tuple[int, int]] = []
         self._ring: Optional[ConsistentHashRing] = None
         self._rebuild_ring_locked()
@@ -101,6 +111,10 @@ class PlacementDirectory:
         self.placement_overrides = 0
         self.epoch_invalidations = 0   # entries dropped by a host restart
         self.evicted_placements = 0    # entries dropped by evict_host
+        self.replicas_added = 0
+        self.replicas_removed = 0
+        self.replica_promotions = 0    # replica became primary on owner loss
+        self.replica_invalidations = 0  # stale replicas scrubbed
 
     # ------------------------------------------------------------------ ring
     def _rebuild_ring_locked(self) -> None:
@@ -131,15 +145,60 @@ class PlacementDirectory:
         ring/load data.
         """
         with self._lock:
-            ent = self._entries.get(key)
-            if ent is not None:
-                host = self._hosts.get(ent.host)
-                if host is not None and host.epoch == ent.epoch:
-                    return ent
-                # stale: the owner restarted (lost its plans) or left
-                del self._entries[key]
-                self.epoch_invalidations += 1
-            return self._place_locked(key)
+            return self._resolve_primary_locked(key)
+
+    def _live_locked(self, ent: Placement) -> bool:
+        host = self._hosts.get(ent.host)
+        return (host is not None and host.epoch == ent.epoch
+                and ent.device < host.n_devices)
+
+    def _resolve_primary_locked(self, key) -> Placement:
+        ent = self._entries.get(key)
+        if ent is not None:
+            if self._live_locked(ent):
+                return ent
+            # stale: the owner restarted (lost its plans) or left
+            del self._entries[key]
+            self.epoch_invalidations += 1
+        promoted = self._promote_locked(key)
+        if promoted is not None:
+            return promoted
+        return self._place_locked(key)
+
+    def _promote_locked(self, key) -> Optional[Placement]:
+        """Make the first surviving replica of ``key`` the primary owner.
+
+        Returns the promoted placement, or None when no live replica
+        exists (the key's replica list, if any, is dropped).
+        """
+        live = self._scrub_replicas_locked(key)
+        if not live:
+            return None
+        ent = live.pop(0)
+        if live:
+            self._replica_entries[key] = live
+        else:
+            self._replica_entries.pop(key, None)
+        self._entries[key] = ent
+        self.replica_promotions += 1
+        return ent
+
+    def _scrub_replicas_locked(self, key) -> List[Placement]:
+        """Drop stale extras of ``key``; return the surviving list."""
+        lst = self._replica_entries.get(key)
+        if not lst:
+            return []
+        primary = self._entries.get(key)
+        live = [e for e in lst
+                if self._live_locked(e)
+                and (primary is None
+                     or (e.host, e.device) != (primary.host, primary.device))]
+        self.replica_invalidations += len(lst) - len(live)
+        if live:
+            self._replica_entries[key] = live
+        else:
+            self._replica_entries.pop(key, None)
+        return list(live)
 
     def lookup(self, key) -> Optional[Placement]:
         """Peek without placing; returns None for unseen AND stale keys."""
@@ -172,12 +231,86 @@ class PlacementDirectory:
             i = index.get((ent.host, ent.device))
             if i is not None:
                 counts[i] += 1
+        for lst in self._replica_entries.values():
+            for ent in lst:
+                i = index.get((ent.host, ent.device))
+                if i is not None:
+                    counts[i] += 1
         return counts
 
     def release(self, key) -> None:
-        """Drop a key's entry (its plan was evicted from the owning shard)."""
+        """Forget a key entirely — primary AND every replica. For dropping
+        a single slot of a replicated key, use :meth:`remove_replica`."""
         with self._lock:
             self._entries.pop(key, None)
+            self._replica_entries.pop(key, None)
+
+    # -------------------------------------------------------------- replicas
+    def replicas(self, key) -> List[Placement]:
+        """The live replica set of ``key``, primary first.
+
+        Resolves (placing if unseen, promoting if the primary went stale)
+        like :meth:`place`, and lazily scrubs stale extras — the returned
+        list always has >= 1 element and element 0 is the primary.
+        """
+        with self._lock:
+            primary = self._resolve_primary_locked(key)
+            return [primary] + self._scrub_replicas_locked(key)
+
+    def add_replica(self, key, host: int, device: int) -> Placement:
+        """Record that ``key``'s plan is (being) staged on ``(host, device)``
+        too. Epoch-stamped with the host's CURRENT epoch, like a primary
+        placement. Idempotent: re-adding a live replica (or the primary's
+        own slot) returns the existing placement. Raises on unknown hosts
+        or out-of-range devices.
+        """
+        with self._lock:
+            hinfo = self._hosts.get(host)
+            if hinfo is None:
+                raise KeyError(f"unknown host rank {host}")
+            if not 0 <= device < hinfo.n_devices:
+                raise ValueError(
+                    f"host {host} has {hinfo.n_devices} devices, "
+                    f"no device {device}")
+            primary = self._resolve_primary_locked(key)
+            if (primary.host, primary.device) == (host, device):
+                return primary
+            live = self._scrub_replicas_locked(key)
+            for e in live:
+                if (e.host, e.device) == (host, device):
+                    return e
+            ent = Placement(host, device, hinfo.epoch)
+            self._replica_entries.setdefault(key, []).append(ent)
+            self.replicas_added += 1
+            return ent
+
+    def remove_replica(self, key, host: int, device: int) -> bool:
+        """Drop ONE replica of ``key``. Removing an extra replica leaves the
+        primary and the other replicas untouched; removing the primary's
+        slot promotes the first surviving replica (the key is only
+        forgotten when its last replica goes). Returns True if a replica
+        was actually removed.
+        """
+        with self._lock:
+            primary = self._entries.get(key)
+            if primary is not None and (primary.host,
+                                        primary.device) == (host, device):
+                del self._entries[key]
+                self.replicas_removed += 1
+                self._promote_locked(key)
+                return True
+            lst = self._replica_entries.get(key)
+            if not lst:
+                return False
+            keep = [e for e in lst if (e.host, e.device) != (host, device)]
+            if len(keep) == len(lst):
+                return False
+            if keep:
+                self._replica_entries[key] = keep
+            else:
+                del self._replica_entries[key]
+            self.replicas_removed += 1
+            return True
 
     # --------------------------------------------------------------- liveness
     def update_host(self, host: HostInfo) -> int:
@@ -211,7 +344,12 @@ class PlacementDirectory:
                 stale = []
             for k in stale:
                 del self._entries[k]
+                # a surviving replica (on another host, or stamped with the
+                # new epoch) takes over instead of the key being forgotten
+                self._promote_locked(k)
             self.epoch_invalidations += len(stale)
+            for k in list(self._replica_entries):
+                self._scrub_replicas_locked(k)
             return len(stale)
 
     def evict_host(self, process_index: int) -> int:
@@ -228,10 +366,17 @@ class PlacementDirectory:
             self._rebuild_ring_locked()
             dead = [k for k, e in self._entries.items()
                     if e.host == process_index]
+            dropped = 0
             for k in dead:
                 del self._entries[k]
-            self.evicted_placements += len(dead)
-            return len(dead)
+                # evicting one replica (the primary's host) must not drop
+                # the plan's other replicas: promote a survivor if any
+                if self._promote_locked(k) is None:
+                    dropped += 1
+            self.evicted_placements += dropped
+            for k in list(self._replica_entries):
+                self._scrub_replicas_locked(k)
+            return dropped
 
     # ------------------------------------------------------------------ stats
     def __len__(self) -> int:
@@ -260,4 +405,12 @@ class PlacementDirectory:
                 "placement_overrides": self.placement_overrides,
                 "epoch_invalidations": self.epoch_invalidations,
                 "evicted_placements": self.evicted_placements,
+                "replicated_keys": sum(
+                    1 for lst in self._replica_entries.values() if lst),
+                "replica_entries": sum(
+                    len(lst) for lst in self._replica_entries.values()),
+                "replicas_added": self.replicas_added,
+                "replicas_removed": self.replicas_removed,
+                "replica_promotions": self.replica_promotions,
+                "replica_invalidations": self.replica_invalidations,
             }

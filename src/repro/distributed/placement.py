@@ -17,14 +17,20 @@ aggregate plan capacity grows with device count:
 
 Staging: the owning shard's plans have their device arrays ``device_put``
 onto the owning device, so a fleet dispatch reads slabs from local memory —
-the plan is *resident on exactly one device*, which is the whole point.
+the plan is *resident on exactly one device* by default. Hot plans can be
+**replicated**: :meth:`FleetPlanCache.add_replica` stages an independent
+copy of the primary's plan on another device's shard (independent because
+``_ensure_staged`` mutates plans in place — a shared object would yank the
+primary's slabs off its device), and :meth:`FleetPlanCache.drop_replica`
+demotes a cold copy. The primary placement is never dropped by demotion.
 """
 from __future__ import annotations
 
 import bisect
+import dataclasses
 import hashlib
 import threading
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 
@@ -111,7 +117,13 @@ class FleetPlanCache:
         # owning shard): exempt from placement pruning, refcounted because
         # several threads can be waiting on one single-flight build
         self._building: Dict[Tuple[str, PartitionConfig], int] = {}
+        # extra replica devices per key (primary NOT included); replicated
+        # and pinned keys are exempt from placement pruning
+        self._replicas: Dict[Tuple[str, PartitionConfig], List[int]] = {}
+        self._pinned: Set[Tuple[str, PartitionConfig]] = set()
         self.placement_overrides = 0   # load-aware departures from the ring
+        self.replicas_added = 0
+        self.replicas_removed = 0
 
     # ------------------------------------------------------------- placement
     def device_index_of(self, key: Tuple[str, PartitionConfig]) -> int:
@@ -133,6 +145,7 @@ class FleetPlanCache:
                 f"pin({device_index}) outside the {len(self.devices)}-device "
                 f"fleet")
         with self._lock:
+            self._pinned.add(key)
             return self._placements.setdefault(key, int(device_index))
 
     def _place_locked(self, key: Tuple[str, PartitionConfig]) -> int:
@@ -156,11 +169,101 @@ class FleetPlanCache:
             # exempt the key just placed and every in-flight build: their
             # plans have not been inserted into the owning shard yet, and a
             # pruned-mid-build placement would re-place later (possibly on
-            # another shard) leaving a duplicate resident copy
+            # another shard) leaving a duplicate resident copy. Also exempt
+            # pinned keys (the cross-host directory dictated their device —
+            # re-placing would disagree with every other host) and keys with
+            # a resident copy on ANY replica shard, not just the primary:
+            # dropping the placement of a replicated key would strand its
+            # replica copies and double-stage the plan on re-lookup.
             self._placements = {
                 k: d for k, d in self._placements.items()
-                if k == key or k in self._building or k in self.shards[d]}
+                if k == key or k in self._building or k in self._pinned
+                or k in self.shards[d]
+                or any(k in self.shards[r]
+                       for r in self._replicas.get(k, ()))}
         return dev
+
+    # -------------------------------------------------------------- replicas
+    def replica_devices(self, key: Tuple[str, PartitionConfig]) -> List[int]:
+        """Device indices holding ``key``'s plan, primary first.
+
+        Extras whose shard has since LRU-evicted the copy are lazily
+        dropped. Does NOT place unseen keys — an unplaced key returns [].
+        """
+        with self._lock:
+            primary = self._placements.get(key)
+            if primary is None:
+                return []
+            extras = self._replicas.get(key)
+            if extras:
+                live = [d for d in extras if key in self.shards[d]]
+                if len(live) != len(extras):
+                    self.replicas_removed += len(extras) - len(live)
+                    if live:
+                        self._replicas[key] = live
+                    else:
+                        del self._replicas[key]
+                extras = live
+            return [primary] + list(extras or [])
+
+    def add_replica(self, key: Tuple[str, PartitionConfig],
+                    device_index: int) -> bool:
+        """Stage an independent copy of ``key``'s plan on another device.
+
+        The copy's slabs/inv_perm are ``device_put`` onto the target via a
+        ``dataclasses.replace`` clone — the primary plan object is mutated
+        in place by ``_ensure_staged``, so sharing it would move the
+        primary's arrays. Idempotent; returns False when the primary has
+        no resident plan to copy (nothing staged).
+        """
+        if not 0 <= device_index < len(self.devices):
+            raise ValueError(
+                f"add_replica({device_index}) outside the "
+                f"{len(self.devices)}-device fleet")
+        with self._lock:
+            primary = self._placements.get(key)
+            if primary is None or device_index == primary:
+                return primary is not None and device_index == primary
+            if device_index in self._replicas.get(key, ()):
+                return True
+        plan = self.shards[primary].lookup(key)
+        if plan is None:
+            return False
+        device = self.devices[device_index]
+        copy = dataclasses.replace(
+            plan,
+            slabs={k: (jax.device_put(v, device) if hasattr(v, "shape")
+                       else v)
+                   for k, v in plan.slabs.items()},
+            inv_perm=jax.device_put(plan.inv_perm, device))
+        self.shards[device_index].put(copy)
+        with self._lock:
+            lst = self._replicas.setdefault(key, [])
+            if device_index not in lst:
+                lst.append(device_index)
+                self.replicas_added += 1
+        return True
+
+    def drop_replica(self, key: Tuple[str, PartitionConfig],
+                     device_index: int) -> bool:
+        """Demote one replica copy. The PRIMARY placement is never dropped
+        here — demotion only trims extras, so a cold streak can never
+        un-place a plan (use ``clear`` or shard eviction for that)."""
+        with self._lock:
+            lst = self._replicas.get(key)
+            if not lst or device_index not in lst:
+                return False
+            lst.remove(device_index)
+            if not lst:
+                del self._replicas[key]
+            self.replicas_removed += 1
+        self.shards[device_index].remove(key)
+        return True
+
+    def plan_on(self, key: Tuple[str, PartitionConfig],
+                device_index: int) -> Optional[PartitionPlan]:
+        """The resident plan copy on one specific shard (None if absent)."""
+        return self.shards[device_index].lookup(key)
 
     # --------------------------------------------------------------- lookups
     def get_or_build(self, g: CSRGraph, cfg: PartitionConfig) -> PartitionPlan:
@@ -227,6 +330,8 @@ class FleetPlanCache:
             s.clear()
         with self._lock:
             self._placements.clear()
+            self._replicas.clear()
+            self._pinned.clear()
 
     def keys(self):
         out = []
@@ -264,4 +369,11 @@ class FleetPlanCache:
         with self._lock:
             agg["placements"] = len(self._placements)
             agg["placement_overrides"] = self.placement_overrides
+            agg["replicated_keys"] = sum(
+                1 for lst in self._replicas.values() if lst)
+            agg["replica_copies"] = sum(
+                len(lst) for lst in self._replicas.values())
+            agg["replicas_added"] = self.replicas_added
+            agg["replicas_removed"] = self.replicas_removed
+            agg["pinned"] = len(self._pinned)
         return agg

@@ -26,12 +26,12 @@ import functools
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from ..analysis.roofline import collective_bytes, model_flops_estimate, roofline_terms
 from ..configs import ARCH_IDS, SHAPES_BY_NAME, get_config, shape_skips

@@ -11,7 +11,6 @@ checkpointing, stateless data.
 from __future__ import annotations
 
 import argparse
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +54,9 @@ def main():
 
     if cfg.frontend == "token":
         bf_np = token_batch_fn(batch=args.batch, seq=args.seq, vocab=cfg.vocab)
-        bf = lambda s: {k: jnp.asarray(v) for k, v in bf_np(s).items()}
+
+        def bf(s):
+            return {k: jnp.asarray(v) for k, v in bf_np(s).items()}
     else:  # stub frontend: synthetic frame embeddings
         def bf(s):
             key = jax.random.PRNGKey(s)

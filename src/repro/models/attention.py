@@ -12,13 +12,12 @@ Three compute paths, all numerically equivalent where they overlap:
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .layers import PARAM_DTYPE, apply_rope, dense_init, rope_table, soft_cap
+from .layers import PARAM_DTYPE, apply_rope, dense_init, rope_table
 
 NEG_INF = -2.3819763e38  # large negative, safe in fp32
 

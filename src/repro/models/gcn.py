@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.graph import CSRGraph, csr_from_edges, gcn_normalize
+from ..core.graph import CSRGraph, csr_from_edges
 from ..core.plan_cache import PlanCache
 from ..core.spmm import AccelSpMM, make_accel_spmm
 from .layers import dense_init

@@ -8,8 +8,6 @@ attn + LoRA) groups. Training wraps scan bodies in ``jax.checkpoint``.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -21,7 +19,7 @@ from . import attention as A
 from . import moe as M
 from . import ssm as S
 from .layers import (PARAM_DTYPE, dense_init, embed_init, init_mlp, apply_mlp,
-                     layer_norm, rms_norm, soft_cap)
+                     layer_norm, rms_norm)
 
 
 # ---------------------------------------------------------------------------

@@ -16,7 +16,6 @@ probs; deepseek-moe uses unnormalized gates + shared experts).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

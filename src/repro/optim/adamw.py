@@ -8,8 +8,6 @@ State layout (all sharded like the params via `sharding.param_specs`):
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

@@ -25,6 +25,18 @@ row order) — what changes is the flush:
    block-shard live-block counts next to the inherited ``sched_*`` /
    ``cache_*`` counters.
 
+**Hot-plan replication** (``replicate_hot=True``): a per-plan EWMA request
+rate (:class:`~repro.distributed.replication.ReplicaManager`) promotes hot
+plans onto the least-loaded devices and demotes cold replicas at flush
+boundaries. A flush then (a) routes each single-device group to the
+least-loaded REPLICA of its plan and (b) SPLITS a hot fused group's
+requests across all its replicas — the one-device popularity ceiling that
+zipf traffic otherwise hits (one hot graph pins one device at 100% while
+the rest idle) becomes per-round parallelism. ``hedge_ms`` optionally
+re-dispatches a still-pending group on a second replica after that many
+milliseconds (tail-latency hedging; answers are idempotent so the first
+result wins).
+
 Validated on CPU via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 (see ``tests/test_fleet.py`` and the CI device matrix) — real multi-device
 semantics, no hardware required. On one device everything degrades to the
@@ -44,6 +56,7 @@ import threading
 import time
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
+from functools import partial
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -60,11 +73,13 @@ from ..distributed.multihost import (
     MultihostContext, PeerClient, PeerServer, peer_ports,
 )
 from ..distributed.placement import FleetPlanCache
+from ..distributed.replication import ReplicaManager
 from ..distributed.shard_spmm import (
     commit_block_shards_global, prepare_block_shards,
     prepare_feature_shards, spmm_block_sharded, spmm_feature_sharded,
 )
 from ..kernels.router import FleetDecision, route_fleet
+from ..kernels.spmm_batched import spmm_batched
 from ..launch.mesh import graph_mesh, multihost_graph_mesh
 from .graph_engine import GraphServeEngine
 from .scheduler import WorkItem
@@ -91,6 +106,13 @@ class FleetGraphEngine(GraphServeEngine):
         save_dir: Optional[str] = None,
         min_blocks_per_device: int = 4,
         config: Optional[PartitionConfig] = None,
+        replicate_hot: bool = True,
+        rate_per_replica: float = 200.0,
+        max_replicas: int = 4,
+        replica_halflife_s: float = 2.0,
+        replication_interval_s: float = 0.05,
+        split_min_requests: int = 2,
+        hedge_ms: Optional[float] = None,
         **engine_kw,
     ):
         if devices is not None:
@@ -138,10 +160,79 @@ class FleetGraphEngine(GraphServeEngine):
         self.last_block_counts: Optional[List[int]] = None
         self._t_first_launch: Optional[float] = None
         self._t_last_done: Optional[float] = None
+        # hot-plan replication: EWMA rates -> promote/demote at flush
+        # boundaries (a custom cache without the replica API disables it)
+        self.hedge_ms = hedge_ms
+        # a split sub-group below this many requests costs more in fixed
+        # dispatch overhead than its replica parallelism buys back
+        self.split_min_requests = max(1, split_min_requests)
+        self.hedged_dispatches = 0
+        self.hedge_wins = 0
+        self.replicas: Optional[ReplicaManager] = None
+        if (replicate_hot and self.n_devices > 1
+                and hasattr(self.cache, "add_replica")):
+            self.replicas = ReplicaManager(
+                replicas_fn=self.cache.replica_devices,
+                add_fn=self._add_replica,
+                drop_fn=self._drop_replica,
+                device_load_fn=self._device_loads,
+                rate_per_replica=rate_per_replica,
+                max_replicas=min(max_replicas, self.n_devices),
+                halflife_s=replica_halflife_s,
+                interval_s=replication_interval_s)
 
     def close(self) -> None:
         super().close()
         self._pool.shutdown(wait=True)
+
+    # -------------------------------------------------------------- replicas
+    def _add_replica(self, key, dev: int) -> bool:
+        """ReplicaManager promotion hook: stage a copy locally and, when a
+        placement directory is attached (the multihost engine), record the
+        new ``(host, device)`` replica fleet-wide."""
+        if not self.cache.add_replica(key, dev):
+            return False
+        directory = getattr(self, "directory", None)
+        if directory is not None:
+            try:
+                directory.add_replica(
+                    key, getattr(self, "process_index", 0), dev)
+            except (KeyError, ValueError):
+                pass    # directory host table lags (mid-rejoin): local
+                #         replica still serves, directory catches up later
+        return True
+
+    def _drop_replica(self, key, dev: int) -> bool:
+        """ReplicaManager demotion hook (mirror of :meth:`_add_replica`)."""
+        if not self.cache.drop_replica(key, dev):
+            return False
+        directory = getattr(self, "directory", None)
+        if directory is not None:
+            directory.remove_replica(
+                key, getattr(self, "process_index", 0), dev)
+        return True
+
+    def _device_loads(self) -> List[float]:
+        with self._counters_lock:
+            return list(self.device_busy_s)
+
+    def reset_stats(self) -> None:
+        """Zero the fleet counters (busy clocks, dispatch/request tallies,
+        round count, occupancy window) WITHOUT touching placements,
+        replicas, or learned request rates. Benchmarks use this to measure
+        steady-state occupancy: warm the engine until the hot set is
+        replicated, reset, then measure only the warmed rounds."""
+        with self._counters_lock:
+            self.fleet_rounds = 0
+            self.device_dispatches = [0] * self.n_devices
+            self.device_requests = [0] * self.n_devices
+            self.device_busy_s = [0.0] * self.n_devices
+            self.sharded_dispatches = {"feature": 0, "block": 0}
+            self.sharded_busy_s = 0.0
+            self.hedged_dispatches = 0
+            self.hedge_wins = 0
+            self._t_first_launch = None
+            self._t_last_done = None
 
     # ------------------------------------------------------------------ flush
     def _flush(self, items: List[WorkItem]) -> None:
@@ -151,6 +242,12 @@ class FleetGraphEngine(GraphServeEngine):
         the device pool. A raising launch does not abort its siblings —
         every launch completes or fails its own items, then the first
         exception re-raises so the scheduler fails any stragglers.
+
+        With replication on, a single-device group goes to the least-loaded
+        replica of its plan (round-local load first, busy clock as the
+        tie-break), and a multi-request group on a replicated plan SPLITS
+        across its replicas — each sub-group fuses and dispatches on its
+        own device, concurrently.
         """
         order, groups = self._group_by_graph(items)
         plans = {gid: self.plan_for(gid) for gid in order}
@@ -159,43 +256,113 @@ class FleetGraphEngine(GraphServeEngine):
         # future resolution never sees requests from an uncounted round
         with self._counters_lock:
             self.fleet_rounds += 1
+            busy = list(self.device_busy_s)
 
         sharded: List[Tuple[FleetDecision, str]] = []
-        per_dev: Dict[int, List[str]] = {}
+        per_dev: Dict[int, List[Tuple[str, List[WorkItem],
+                                      PartitionPlan]]] = {}
+        round_load: Dict[int, int] = {}
+        hedges: List[Tuple[int, str, List[WorkItem], PartitionPlan]] = []
+
+        def load_key(d: int) -> Tuple[int, float]:
+            return (round_load.get(d, 0), busy[d])
+
+        def assign(dev: int, gid: str, grp: List[WorkItem],
+                   plan: PartitionPlan) -> None:
+            per_dev.setdefault(dev, []).append((gid, grp, plan))
+            round_load[dev] = round_load.get(dev, 0) + len(grp)
+
         for gid in order:
             plan = plans[gid]
-            fused_f = sum(int(it.payload[1].shape[1]) for it in groups[gid])
-            fd = route_fleet(
-                plan.n_cols, fused_f, int(plan.slabs["C"]),
-                int(plan.slabs["R"]), plan.num_blocks, self.n_devices,
-                min_blocks_per_device=self.min_blocks_per_device)
-            if fd.strategy in ("feature", "block"):
-                sharded.append((fd, gid))
+            grp = groups[gid]
+            key = self._keys[gid]
+            devs: List[int] = []
+            if self.replicas is not None:
+                # every request counts toward the rate estimate, whatever
+                # path the group ends up on — otherwise hot graphs that
+                # route to whole-mesh sharding never look hot
+                self.replicas.observe(key, len(grp))
+                devs = self.cache.replica_devices(key)
+            if len(devs) <= 1 or len(grp) == 1:
+                # unreplicated (or single-request) groups keep the PR-5
+                # routing: whole-mesh shard when the fused dispatch is big
+                # enough to warrant it. A replicated multi-request group
+                # skips this — splitting over its replicas runs the same
+                # work without any cross-device psum/gather.
+                fused_f = sum(int(it.payload[1].shape[1]) for it in grp)
+                fd = route_fleet(
+                    plan.n_cols, fused_f, int(plan.slabs["C"]),
+                    int(plan.slabs["R"]), plan.num_blocks, self.n_devices,
+                    min_blocks_per_device=self.min_blocks_per_device)
+                if fd.strategy in ("feature", "block"):
+                    sharded.append((fd, gid))
+                    continue
+            if not devs:
+                devs = [self.cache.device_index_of(key)]
+            primary = devs[0]
+
+            def replica_plan(dev: int) -> Optional[PartitionPlan]:
+                return plan if dev == primary else self.cache.plan_on(
+                    key, dev)
+
+            if len(devs) == 1 or len(grp) == 1:
+                dev = min(devs, key=load_key)
+                p = replica_plan(dev)
+                if p is None:           # replica copy LRU-evicted meanwhile
+                    dev, p = primary, plan
+                assign(dev, gid, grp, p)
+                if self.hedge_ms is not None and len(devs) > 1:
+                    alts = [d for d in devs if d != dev]
+                    hp = replica_plan(min(alts, key=load_key))
+                    if hp is not None:
+                        hedges.append(
+                            (min(alts, key=load_key), gid, grp, hp))
             else:
-                dev = self.cache.device_index_of(self._keys[gid])
-                per_dev.setdefault(dev, []).append(gid)
+                # hot-group split: the fused group's requests spread over
+                # its replicas, least-loaded first — but never into
+                # sub-groups smaller than split_min_requests (fixed
+                # dispatch overhead would eat the parallelism win). Up to
+                # 4 sub-groups PER replica: several back-to-back dispatches
+                # per device keep every device busy until the round ends
+                # instead of early finishers idling behind the stragglers.
+                by_load = sorted(devs, key=load_key)
+                n_sub = max(1, min(len(grp) // self.split_min_requests,
+                                   4 * len(by_load)))
+                buckets: List[List[WorkItem]] = [[] for _ in range(n_sub)]
+                for i, it in enumerate(grp):
+                    buckets[i % n_sub].append(it)
+                for j, sub_grp in enumerate(buckets):
+                    dev = by_load[j % len(by_load)]
+                    p = replica_plan(dev)
+                    if p is None:
+                        dev, p = primary, plan
+                    assign(dev, gid, sub_grp, p)
 
         # ONE pool task per device (its chunks run back to back, so the
         # per-device busy clock never double-bills overlapping launches);
         # sharded whole-mesh dispatches get their own tasks
         launches = []
-        for dev, gids in sorted(per_dev.items()):
-            launches.append((self._launch_device, dev, gids))
+        for dev, work in sorted(per_dev.items()):
+            launches.append(partial(self._launch_device, dev, work))
         for fd, gid in sharded:
-            launches.append((self._launch_sharded, fd, gid))
+            launches.append(
+                partial(self._launch_sharded, fd, gid, groups, plans))
+        for hedge in hedges:
+            timer = threading.Timer(self.hedge_ms / 1e3, self._run_hedge,
+                                    args=hedge)
+            timer.daemon = True
+            timer.start()
 
         first_exc: Optional[BaseException] = None
         n_ok = 0
         if len(launches) == 1:          # common case: skip the pool hop
-            fn, *args = launches[0]
             try:
-                fn(*args, groups, plans)
+                launches[0]()
                 n_ok = 1
             except BaseException as e:  # noqa: BLE001 — re-raised below
                 first_exc = e
         else:
-            futs = [self._pool.submit(fn, *args, groups, plans)
-                    for fn, *args in launches]
+            futs = [self._pool.submit(fn) for fn in launches]
             for f in futs:
                 try:
                     f.result()
@@ -210,31 +377,36 @@ class FleetGraphEngine(GraphServeEngine):
                 with self._counters_lock:
                     self.fleet_rounds -= 1
             raise first_exc
+        if self.replicas is not None:
+            # "background" promotion/demotion without a dedicated thread:
+            # tick at flush boundaries, rate-limited by interval_s (one
+            # sweep stages at most a few plan copies)
+            self.replicas.maybe_step()
 
     # ---------------------------------------------------------------- device
-    def _launch_device(self, dev: int, gids: List[str],
-                       groups: Dict[str, List[WorkItem]],
-                       plans: Dict[str, PartitionPlan]) -> None:
-        """One device's dispatches for this round, back to back: the plan
-        slabs are already resident on ``devices[dev]`` (committed by the
-        fleet cache), so running the inherited dispatch under that default
-        device keeps every intermediate local to the owner. Chunking by
+    def _launch_device(self, dev: int,
+                       work: List[Tuple[str, List[WorkItem],
+                                        PartitionPlan]]) -> None:
+        """One device's dispatches for this round, back to back: each work
+        tuple's plan copy is already resident on ``devices[dev]`` (the
+        primary committed by the fleet cache, replicas staged by the
+        ReplicaManager), so running the inherited dispatch under that
+        default device keeps every intermediate local. Chunking by
         ``max_graphs_per_batch`` matches the single-device engine."""
         t0 = time.perf_counter()
         with jax.default_device(self.devices[dev]):
-            for start in range(0, len(gids), self.max_graphs_per_batch):
-                chunk = gids[start:start + self.max_graphs_per_batch]
+            for start in range(0, len(work), self.max_graphs_per_batch):
+                chunk = work[start:start + self.max_graphs_per_batch]
                 # count BEFORE the dispatch resolves its futures: a caller
                 # whose serve() unblocks on the last future must see these
                 # requests in the per-device stats (rolled back on failure,
                 # mirroring the base counters never advancing)
-                n_req = sum(len(groups[g]) for g in chunk)
+                n_req = sum(len(grp) for _, grp, _ in chunk)
                 with self._counters_lock:
                     self.device_dispatches[dev] += 1
                     self.device_requests[dev] += n_req
                 try:
-                    self._dispatch([(gid, groups[gid], plans[gid])
-                                    for gid in chunk])
+                    self._dispatch(chunk)
                 except BaseException:
                     with self._counters_lock:
                         self.device_dispatches[dev] -= 1
@@ -244,6 +416,42 @@ class FleetGraphEngine(GraphServeEngine):
         with self._counters_lock:
             self.device_busy_s[dev] += dt
             self._note_window_locked(t0, dt)
+
+    def _run_hedge(self, dev: int, gid: str, grp: List[WorkItem],
+                   plan: PartitionPlan) -> None:
+        """Tail-latency hedge: ``hedge_ms`` after the flush, re-dispatch a
+        group's still-pending requests on another replica. Answers settle
+        idempotently (``WorkItem.complete`` is first-wins), so a duplicate
+        result is harmless; a hedge failure is swallowed — the primary
+        dispatch owns the items. Hedges do NOT count as served requests
+        (only the hedge counters move), keeping the per-device request
+        balance exact."""
+        pending = [it for it in grp if not it.done]
+        if not pending:
+            return
+        try:
+            feats = [jnp.asarray(it.payload[1], dtype=jnp.float32)
+                     for it in pending]
+            widths = [int(f.shape[1]) for f in feats]
+            x = (feats[0] if len(feats) == 1
+                 else jnp.concatenate(feats, axis=1))
+            with jax.default_device(self.devices[dev]):
+                outs = spmm_batched([plan.slabs], [x], [plan.n_rows],
+                                    backend=self.backend,
+                                    interpret=self.interpret)
+            out = outs[0][plan.inv_perm]
+            answers, _ = self._slice_answers(pending, widths, out,
+                                             time.perf_counter())
+            wins = 0
+            for item, result in answers:
+                if not item.done:
+                    item.complete(result)
+                    wins += 1
+            with self._counters_lock:
+                self.hedged_dispatches += 1
+                self.hedge_wins += wins
+        except Exception:   # noqa: BLE001 — best-effort duplicate work
+            pass
 
     # --------------------------------------------------------------- sharded
     def _launch_sharded(self, fd: FleetDecision, gid: str,
@@ -372,7 +580,18 @@ class FleetGraphEngine(GraphServeEngine):
             # blocks per device (1.0 == perfectly balanced)
             fleet_block_balance=(max(counts) * len(counts) / sum(counts)
                                  if counts and sum(counts) else 0.0),
+            # tail-latency hedging (0 unless hedge_ms is set)
+            fleet_hedged=self.hedged_dispatches,
+            fleet_hedge_wins=self.hedge_wins,
         )
+        # hot-plan replication activity (replica_* residency counts arrive
+        # via the cache_* prefix: cache_replicated_keys, cache_replica_copies)
+        if self.replicas is not None:
+            s.update({f"fleet_{k}": v
+                      for k, v in self.replicas.stats().items()})
+        else:
+            s.update(fleet_promotions=0, fleet_demotions=0,
+                     fleet_replication_steps=0)
         return s
 
 
@@ -585,12 +804,15 @@ class MultihostGraphEngine(FleetGraphEngine):
             if any(len(it.payload) > 2 for it in grp):
                 local.extend(grp)     # pinned by a peer forward: never bounce
                 continue
-            placement = self.directory.place(self._keys[gid])
-            if (placement.host == self.process_index
-                    or placement.host not in self.peers):
+            # consult the full replica set: a plan replicated ONTO this
+            # host serves locally even when another host owns the primary
+            reps = self.directory.replicas(self._keys[gid])
+            owner = reps[0]
+            if (any(r.host == self.process_index for r in reps)
+                    or owner.host not in self.peers):
                 local.extend(grp)
             else:
-                by_host.setdefault(placement.host, []).append((gid, grp))
+                by_host.setdefault(owner.host, []).append((gid, grp))
 
         futs = [self._pool.submit(self._forward_host, host, host_groups)
                 for host, host_groups in sorted(by_host.items())]

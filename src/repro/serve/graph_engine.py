@@ -63,7 +63,7 @@ from ..core.plan_cache import (
 )
 from ..kernels.router import RoutingDecision
 from ..kernels.spmm_batched import bucket_blocks, spmm_batched
-from .scheduler import BatchScheduler, WorkItem
+from .scheduler import BatchScheduler, ClassSpec, WorkItem
 
 __all__ = ["GraphRequest", "GraphServeEngine"]
 
@@ -81,6 +81,8 @@ class GraphRequest:
     out: Optional[jax.Array] = None    # filled by serve()
     latency_s: Optional[float] = None  # enqueue -> answer wall time (includes
     #                                    queue wait behind earlier dispatches)
+    klass: str = "default"             # SLO class (must name a ClassSpec)
+    tenant: Optional[str] = None       # opaque owner tag (stats only)
 
 
 class GraphServeEngine:
@@ -107,6 +109,7 @@ class GraphServeEngine:
         max_wait_ms: float = 2.0,
         max_pending: int = 256,
         feature_bucket: bool = True,
+        classes: Optional[Sequence[ClassSpec]] = None,
     ):
         self.config = config or PartitionConfig()
         self.cache = cache if cache is not None else PlanCache(cache_capacity)
@@ -134,6 +137,7 @@ class GraphServeEngine:
             max_wait_ms=max_wait_ms,
             max_queue=max_pending,
             name="graph-serve",
+            classes=classes,
         )
         # serving counters. The base engine mutates them only on the
         # scheduler's flush thread; the fleet subclass dispatches from a
@@ -204,17 +208,21 @@ class GraphServeEngine:
                 f"expected [{g.n_cols}, F]")
 
     def submit(self, graph_id: str, x: jax.Array, *,
-               block: bool = True) -> Future:
+               block: bool = True, klass: str = "default",
+               tenant: Optional[str] = None) -> Future:
         """Admit one request; returns a ``Future`` of the ``[n_rows, F]``
         aggregation in ORIGINAL row order.
 
-        Validation (unknown graph, wrong feature shape) raises here,
-        synchronously. A full admission queue blocks (backpressure) or,
-        with ``block=False``, raises
-        :class:`repro.serve.scheduler.QueueFullError`.
+        Validation (unknown graph, wrong feature shape, unknown SLO class)
+        raises here, synchronously. A full admission queue blocks
+        (backpressure) or, with ``block=False``, raises
+        :class:`repro.serve.scheduler.QueueFullError`. ``klass`` names one
+        of the engine's configured :class:`ClassSpec` entries; ``tenant``
+        is an opaque owner tag carried into per-class stats.
         """
         self._validate(graph_id, x)
-        return self.scheduler.submit((graph_id, x), block=block).future
+        return self.scheduler.submit((graph_id, x), block=block,
+                                     klass=klass, tenant=tenant).future
 
     def serve_one(self, graph_id: str, x: jax.Array) -> jax.Array:
         """Convenience single-request path (still goes through the batch code)."""
@@ -231,8 +239,10 @@ class GraphServeEngine:
         """
         for r in requests:
             self._validate(r.graph_id, r.x)
-        items = self.scheduler.submit_many([(r.graph_id, r.x)
-                                            for r in requests])
+        items = self.scheduler.submit_many(
+            [(r.graph_id, r.x) for r in requests],
+            klass=[r.klass for r in requests],
+            tenant=[r.tenant for r in requests])
         first_exc: Optional[BaseException] = None
         for r, item in zip(requests, items):
             try:

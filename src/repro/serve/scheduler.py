@@ -50,6 +50,27 @@ Tuning knobs:
   dispatch — still cross-caller batching under load).
 * ``max_queue`` — admission bound. When the queue is full, ``submit``
   blocks (backpressure propagates to callers) or raises.
+
+SLO classes (``classes=[ClassSpec(...)]``): every admitted item carries a
+request class (and optionally a tenant tag). Classes add three behaviors on
+top of the base FIFO scheduler — which is exactly what a single default
+class degenerates to:
+
+* **weighted-fair admission** — each class below the top priority tier gets
+  an admission quota proportional to its weight, so a batch-job flood can
+  fill at most its share of the queue and an interactive submitter always
+  finds room (the top tier is bounded only by ``max_queue``).
+* **priority + weighted-fair batch formation** — a flush batch drains the
+  highest-priority non-empty tier first; classes sharing a tier interleave
+  in proportion to their weights (deficit round-robin), FIFO within each
+  class. A deep batch backlog therefore cannot starve interactive items
+  that arrived later.
+* **early-flush-for-deadline** — a class with ``deadline_ms`` flushes after
+  ``min(max_wait_ms, deadline_ms/4)`` instead of the scheduler-wide wait,
+  so an SLO-bound request never burns its latency budget waiting for
+  co-batchable traffic. Misses are counted per class
+  (``class_deadline_missed``) and per-class latency percentiles are
+  reported next to the global ones.
 """
 from __future__ import annotations
 
@@ -59,13 +80,56 @@ import threading
 import time
 from collections import deque
 from concurrent.futures import Future
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
-__all__ = ["QueueFullError", "WorkItem", "BatchScheduler", "percentile"]
+__all__ = ["QueueFullError", "ClassSpec", "WorkItem", "BatchScheduler",
+           "percentile"]
 
 
 class QueueFullError(RuntimeError):
     """Admission rejected: the queue is at ``max_queue`` (backpressure)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassSpec:
+    """One request class (SLO tier) of a :class:`BatchScheduler`.
+
+    ``priority`` orders tiers (higher drains first); ``weight`` sets both
+    the admission quota and the fair share among classes of the SAME
+    priority; ``deadline_ms`` is the class's enqueue->answer SLO target —
+    it tightens the co-batching wait (early flush) and drives the
+    ``class_deadline_missed`` counter. ``max_wait_ms`` overrides the
+    derived co-batching wait outright.
+    """
+
+    name: str
+    priority: int = 0
+    weight: float = 1.0
+    deadline_ms: Optional[float] = None
+    max_wait_ms: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("class name must be non-empty")
+        if self.weight <= 0:
+            raise ValueError(f"class {self.name}: weight must be > 0")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(f"class {self.name}: deadline_ms must be > 0")
+        if self.max_wait_ms is not None and self.max_wait_ms < 0:
+            raise ValueError(f"class {self.name}: max_wait_ms must be >= 0")
+
+    def effective_wait_ms(self, scheduler_wait_ms: float) -> float:
+        """Co-batching wait for this class: an explicit override wins;
+        otherwise a deadline-bearing class flushes after at most a quarter
+        of its SLO budget (leaving the rest for dispatch + compute)."""
+        if self.max_wait_ms is not None:
+            return self.max_wait_ms
+        if self.deadline_ms is not None:
+            return min(scheduler_wait_ms, self.deadline_ms / 4.0)
+        return scheduler_wait_ms
+
+
+DEFAULT_CLASS = ClassSpec("default")
 
 
 def percentile(sorted_vals: Sequence[float], q: float) -> float:
@@ -98,9 +162,10 @@ class WorkItem:
     """
 
     __slots__ = ("payload", "future", "t_enqueue", "t_done", "_sched",
-                 "_settled")
+                 "_settled", "klass", "tenant", "flush_at", "deadline_at")
 
-    def __init__(self, payload: Any, sched: "BatchScheduler"):
+    def __init__(self, payload: Any, sched: "BatchScheduler",
+                 klass: str = "default", tenant: Optional[str] = None):
         self.payload = payload
         self.future: Future = Future()
         self.t_enqueue = time.perf_counter()
@@ -109,6 +174,19 @@ class WorkItem:
         self._settled = False   # some claim attempt already concluded this
         #                         item (fast path only; the Future's own
         #                         lock remains the arbiter)
+        self.klass = klass
+        self.tenant = tenant
+        spec = sched.classes.get(klass, DEFAULT_CLASS)
+        self.flush_at = (self.t_enqueue
+                         + spec.effective_wait_ms(sched.max_wait_ms) / 1e3)
+        self.deadline_at = (None if spec.deadline_ms is None
+                            else self.t_enqueue + spec.deadline_ms / 1e3)
+
+    @property
+    def deadline_missed(self) -> bool:
+        """True once the item resolved later than its class SLO deadline."""
+        return (self.deadline_at is not None and self.t_done is not None
+                and self.t_done > self.deadline_at)
 
     @property
     def done(self) -> bool:
@@ -190,6 +268,7 @@ class BatchScheduler:
         max_wait_ms: float = 5.0,
         max_queue: int = 256,
         name: str = "batch-scheduler",
+        classes: Optional[Sequence[ClassSpec]] = None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -203,8 +282,19 @@ class BatchScheduler:
         self.max_queue = max_queue
         self.name = name
 
+        # request classes: always at least "default" (pure FIFO semantics
+        # when it is the only one). Listed specs may override "default".
+        self.classes: Dict[str, ClassSpec] = {"default": DEFAULT_CLASS}
+        for spec in classes or ():
+            self.classes[spec.name] = spec
+        self._quota = self._admission_quotas()
+
         self._cond = threading.Condition()
-        self._queue: "deque[WorkItem]" = deque()
+        self._queues: Dict[str, "deque[WorkItem]"] = {
+            name: deque() for name in self.classes}
+        # deficit-round-robin credits for weighted interleave inside one
+        # priority tier (guarded by _cond; reset when a class drains)
+        self._credits: Dict[str, float] = {name: 0.0 for name in self.classes}
         self._thread: Optional[threading.Thread] = None
         self._running = False
         self._closing = False     # stop() in progress: admissions raise
@@ -222,10 +312,89 @@ class BatchScheduler:
         self.items_flushed = 0
         self.mid_flush_admissions = 0  # items pulled by take_ready
         self.flush_reasons: Dict[str, int] = {
-            "size": 0, "deadline": 0, "drain": 0}
+            "size": 0, "deadline": 0, "drain": 0, "slo": 0}
         self.peak_queue_depth = 0
         self._latencies: "deque[float]" = deque(maxlen=self._LAT_WINDOW)
         self._total_latency_s = 0.0
+        # per-class accounting (same lock): latency windows + SLO misses
+        self._class_latencies: Dict[str, "deque[float]"] = {
+            name: deque(maxlen=self._LAT_WINDOW) for name in self.classes}
+        self.class_completed: Dict[str, int] = {n: 0 for n in self.classes}
+        self.class_deadline_missed: Dict[str, int] = {
+            n: 0 for n in self.classes}
+
+    def _admission_quotas(self) -> Dict[str, int]:
+        """Per-class admission bound. Top-priority classes may use the whole
+        queue; every lower tier is capped at its weighted share, so a
+        lower-priority flood can never fill the queue against the top tier
+        (weighted-fair admission)."""
+        top = max(spec.priority for spec in self.classes.values())
+        total_w = sum(spec.weight for spec in self.classes.values())
+        quotas = {}
+        for name, spec in self.classes.items():
+            if spec.priority >= top:
+                quotas[name] = self.max_queue
+            else:
+                quotas[name] = max(1, int(self.max_queue
+                                          * spec.weight / total_w))
+        return quotas
+
+    # ---------------------------------------------------------- queue helpers
+    def _qsize_locked(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def _class_of(self, klass: str) -> "deque[WorkItem]":
+        q = self._queues.get(klass)
+        if q is None:
+            raise KeyError(
+                f"{self.name}: unknown request class {klass!r} "
+                f"(known: {sorted(self.classes)})")
+        return q
+
+    def _admission_full_locked(self, klass: str, need: int = 1) -> bool:
+        if self._qsize_locked() + need > self.max_queue:
+            return True
+        return len(self._queues[klass]) + need > self._quota[klass]
+
+    def _pop_next_locked(self) -> Optional[WorkItem]:
+        """Pop the next item under priority + weighted-fair (DRR) order:
+        highest non-empty priority tier first; classes sharing that tier
+        interleave proportionally to their weights; FIFO within a class."""
+        active = [n for n, q in self._queues.items() if q]
+        if not active:
+            return None
+        if len(active) == 1:
+            return self._queues[active[0]].popleft()
+        top = max(self.classes[n].priority for n in active)
+        tier = [n for n in active if self.classes[n].priority == top]
+        if len(tier) == 1:
+            return self._queues[tier[0]].popleft()
+        for n in tier:
+            self._credits[n] += self.classes[n].weight
+        pick = max(tier, key=lambda n: self._credits[n])
+        self._credits[pick] -= sum(self.classes[n].weight for n in tier)
+        return self._queues[pick].popleft()
+
+    def _take_batch_locked(self, k: int) -> List[WorkItem]:
+        items: List[WorkItem] = []
+        while len(items) < k:
+            item = self._pop_next_locked()
+            if item is None:
+                break
+            items.append(item)
+        # drained classes reset their credit so an idle class cannot bank
+        # an unbounded claim on future flushes
+        for n, q in self._queues.items():
+            if not q:
+                self._credits[n] = 0.0
+        return items
+
+    def _next_flush_at_locked(self) -> Optional[float]:
+        """Earliest flush deadline over queued items. FIFO within a class
+        and a constant per-class wait make each queue head the earliest of
+        its class, so the scan is O(classes)."""
+        heads = [q[0].flush_at for q in self._queues.values() if q]
+        return min(heads) if heads else None
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
@@ -280,35 +449,44 @@ class BatchScheduler:
 
     # ------------------------------------------------------------ admission
     def submit(self, payload: Any, *, block: bool = True,
-               timeout: Optional[float] = None) -> WorkItem:
+               timeout: Optional[float] = None, klass: str = "default",
+               tenant: Optional[str] = None) -> WorkItem:
         """Admit one payload; returns its :class:`WorkItem` (with ``.future``).
 
         A full queue blocks (backpressure) until a flush drains it, or
         raises :class:`QueueFullError` when ``block=False`` or ``timeout``
-        expires.
+        expires. ``klass`` must name a configured :class:`ClassSpec`; a
+        class at its weighted admission quota backpressures exactly like a
+        full queue (other classes are unaffected).
         """
         deadline = None if timeout is None else time.perf_counter() + timeout
         with self._cond:
+            self._class_of(klass)
             self._ensure_started_locked()
-            while len(self._queue) >= self.max_queue:
+            while self._admission_full_locked(klass):
                 if not block:
                     self.rejected += 1
                     raise QueueFullError(
-                        f"{self.name}: queue full ({self.max_queue})")
+                        f"{self.name}: queue full for class {klass!r} "
+                        f"({len(self._queues[klass])}/{self._quota[klass]}, "
+                        f"total {self._qsize_locked()}/{self.max_queue})")
                 remaining = (None if deadline is None
                              else deadline - time.perf_counter())
                 if remaining is not None and remaining <= 0:
                     self.rejected += 1
                     raise QueueFullError(
-                        f"{self.name}: queue full ({self.max_queue}) "
+                        f"{self.name}: queue full for class {klass!r} "
                         f"after {timeout}s")
                 self._cond.wait(remaining)
             # the wait may have outlived a stop(): re-ensure a live worker
             self._ensure_started_locked()
-            return self._enqueue_locked(payload)
+            return self._enqueue_locked(payload, klass, tenant)
 
     def submit_many(self, payloads: Sequence[Any], *, block: bool = True,
-                    timeout: Optional[float] = None) -> List[WorkItem]:
+                    timeout: Optional[float] = None,
+                    klass: Union[str, Sequence[str]] = "default",
+                    tenant: Union[None, str, Sequence[Optional[str]]] = None,
+                    ) -> List[WorkItem]:
         """Atomically admit several payloads: they enter the queue as one
         contiguous run, so a single flush sees them together (this is what
         keeps the synchronous ``serve(requests)`` wrapper's batching
@@ -324,39 +502,56 @@ class BatchScheduler:
         payloads = list(payloads)
         if not payloads:
             return []
+        klasses = ([klass] * len(payloads) if isinstance(klass, str)
+                   else list(klass))
+        if len(klasses) != len(payloads):
+            raise ValueError(
+                f"{len(klasses)} classes for {len(payloads)} payloads")
+        tenants = ([tenant] * len(payloads)
+                   if tenant is None or isinstance(tenant, str)
+                   else list(tenant))
+        if len(tenants) != len(payloads):
+            raise ValueError(
+                f"{len(tenants)} tenants for {len(payloads)} payloads")
         deadline = None if timeout is None else time.perf_counter() + timeout
         with self._cond:
+            for k in set(klasses):
+                self._class_of(k)
             self._ensure_started_locked()
             need = len(payloads)
-            while (len(self._queue) + need > self.max_queue
-                   and len(self._queue) > 0):
+            while (self._qsize_locked() + need > self.max_queue
+                   and self._qsize_locked() > 0):
                 if not block:
                     self.rejected += need
                     raise QueueFullError(
                         f"{self.name}: no room for {need} items "
-                        f"(queue {len(self._queue)}/{self.max_queue})")
+                        f"(queue {self._qsize_locked()}/{self.max_queue})")
                 remaining = (None if deadline is None
                              else deadline - time.perf_counter())
                 if remaining is not None and remaining <= 0:
                     self.rejected += need
                     raise QueueFullError(
                         f"{self.name}: no room for {need} items "
-                        f"(queue {len(self._queue)}/{self.max_queue}) "
+                        f"(queue {self._qsize_locked()}/{self.max_queue}) "
                         f"after {timeout}s")
                 self._cond.wait(remaining)
             # the wait may have outlived a stop(): re-ensure a live worker
             self._ensure_started_locked()
-            return [self._enqueue_locked(p) for p in payloads]
+            return [self._enqueue_locked(p, k, t)
+                    for p, k, t in zip(payloads, klasses, tenants)]
 
-    def _enqueue_locked(self, payload: Any) -> WorkItem:
-        item = WorkItem(payload, self)
-        self._queue.append(item)
+    def _enqueue_locked(self, payload: Any, klass: str = "default",
+                        tenant: Optional[str] = None) -> WorkItem:
+        item = WorkItem(payload, self, klass, tenant)
+        self._queues[klass].append(item)
         self.submitted += 1
-        self.peak_queue_depth = max(self.peak_queue_depth, len(self._queue))
+        self.peak_queue_depth = max(self.peak_queue_depth,
+                                    self._qsize_locked())
         self._cond.notify_all()
         return item
 
-    def adopt(self, payload: Any) -> WorkItem:
+    def adopt(self, payload: Any, klass: str = "default",
+              tenant: Optional[str] = None) -> WorkItem:
         """Create an item counted as submitted but NOT enqueued — the
         caller dispatches it directly on its own thread.
 
@@ -370,7 +565,7 @@ class BatchScheduler:
         == submitted`` still holds.
         """
         with self._cond:
-            item = WorkItem(payload, self)
+            item = WorkItem(payload, self, klass, tenant)
             self.submitted += 1
             return item
 
@@ -378,14 +573,13 @@ class BatchScheduler:
         """Non-blocking pop of up to ``k`` queued items into the RUNNING
         flush (call only from ``flush_fn``). Enables slot reuse: a decode
         loop refills freed slots with work that arrived after the flush
-        started, instead of waiting for the next flush boundary.
+        started, instead of waiting for the next flush boundary. Items come
+        out in the same priority/weighted-fair order a flush batch uses.
         """
         if k <= 0:
             return []
         with self._cond:
-            items = []
-            while self._queue and len(items) < k:
-                items.append(self._queue.popleft())
+            items = self._take_batch_locked(k)
             if items:
                 self.mid_flush_admissions += len(items)
                 self._current_extra.extend(items)
@@ -396,9 +590,9 @@ class BatchScheduler:
     def _worker(self) -> None:
         while True:
             with self._cond:
-                while self._running and not self._queue:
+                while self._running and not self._qsize_locked():
                     self._cond.wait()
-                if not self._queue:
+                if not self._qsize_locked():
                     if not self._running:
                         # clear the handle under the SAME lock hold as the
                         # exit decision, so _ensure_started_locked can never
@@ -407,20 +601,22 @@ class BatchScheduler:
                         return
                     continue
                 now = time.perf_counter()
-                oldest_deadline = (self._queue[0].t_enqueue
-                                   + self.max_wait_ms / 1e3)
+                next_flush = self._next_flush_at_locked()
                 if not self._running:
                     reason = "drain"
-                elif len(self._queue) >= self.max_batch:
+                elif self._qsize_locked() >= self.max_batch:
                     reason = "size"
-                elif now >= oldest_deadline:
-                    reason = "deadline"
+                elif now >= next_flush:
+                    # "slo": a deadline-bearing class tightened the wait
+                    # below the scheduler-wide max_wait_ms (early flush)
+                    plain = min(q[0].t_enqueue
+                                for q in self._queues.values()
+                                if q) + self.max_wait_ms / 1e3
+                    reason = "slo" if next_flush < plain - 1e-9 else "deadline"
                 else:
-                    self._cond.wait(oldest_deadline - now)
+                    self._cond.wait(next_flush - now)
                     continue
-                batch = [self._queue.popleft()
-                         for _ in range(min(self.max_batch,
-                                            len(self._queue)))]
+                batch = self._take_batch_locked(self.max_batch)
                 self.flushes += 1
                 self.flush_reasons[reason] += 1
                 self.items_flushed += len(batch)
@@ -448,9 +644,17 @@ class BatchScheduler:
                 self.failed += 1
             else:
                 self.completed += 1
+                self.class_completed[item.klass] = \
+                    self.class_completed.get(item.klass, 0) + 1
             if item.latency_s is not None:
                 self._latencies.append(item.latency_s)
                 self._total_latency_s += item.latency_s
+                self._class_latencies.setdefault(
+                    item.klass, deque(maxlen=self._LAT_WINDOW)
+                ).append(item.latency_s)
+            if item.deadline_missed:
+                self.class_deadline_missed[item.klass] = \
+                    self.class_deadline_missed.get(item.klass, 0) + 1
 
     def _record_cancelled(self, item: WorkItem) -> None:
         """A caller's ``Future.cancel()`` beat the flush to this item.
@@ -465,13 +669,19 @@ class BatchScheduler:
 
     def queue_depth(self) -> int:
         with self._cond:
-            return len(self._queue)
+            return self._qsize_locked()
 
     def stats(self) -> Dict[str, float]:
         """Snapshot of the scheduling counters (shared engine vocabulary)."""
         with self._cond:
             lats = sorted(self._latencies)
             answered = self.completed + self.failed
+            per_class_p50 = {}
+            per_class_p99 = {}
+            for name, window in self._class_latencies.items():
+                cl = sorted(window)
+                per_class_p50[name] = percentile(cl, 0.50)
+                per_class_p99[name] = percentile(cl, 0.99)
             return {
                 "submitted": self.submitted,
                 "completed": self.completed,
@@ -486,8 +696,15 @@ class BatchScheduler:
                 "flush_size": self.flush_reasons["size"],
                 "flush_deadline": self.flush_reasons["deadline"],
                 "flush_drain": self.flush_reasons["drain"],
-                "queue_depth": len(self._queue),
+                "flush_slo": self.flush_reasons["slo"],
+                "queue_depth": self._qsize_locked(),
                 "peak_queue_depth": self.peak_queue_depth,
+                "class_queue_depth": {n: len(q)
+                                      for n, q in self._queues.items()},
+                "class_completed": dict(self.class_completed),
+                "class_deadline_missed": dict(self.class_deadline_missed),
+                "per_class_p50": per_class_p50,
+                "per_class_p99": per_class_p99,
                 "avg_latency_s": (self._total_latency_s / answered
                                   if answered else 0.0),
                 "p50_latency_s": percentile(lats, 0.50),

@@ -8,7 +8,6 @@ bf16-compressed gradient accumulation (DESIGN.md §6).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.graph import CSRGraph, csr_from_edges, gcn_normalize
+from repro.core.graph import csr_from_edges, gcn_normalize
 from repro.core.plan_cache import PartitionConfig, build_partition_plan
 from repro.kernels.ref import csr_spmm_ref
 from repro.kernels.spmm_accel import spmm_block_slabs

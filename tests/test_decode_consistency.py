@@ -1,7 +1,6 @@
 """Integration: prefill + decode == full forward, per family (fp32 exact)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_reduced

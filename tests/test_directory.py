@@ -177,3 +177,81 @@ def test_directory_validation():
         HostInfo(0, 0)
     with pytest.raises(ValueError):
         HostInfo(-1, 2)
+
+
+# ------------------------------------------------------------- replica sets
+def test_replica_add_remove_listing():
+    d = PlacementDirectory(_hosts(n=2, devs=2))
+    key = _keys(1)[0]
+    prim = d.place(key)
+    # a slot different from the primary, on the other host
+    other = (1 - prim.host, 0)
+    ent = d.add_replica(key, *other)
+    assert [(p.host, p.device) for p in d.replicas(key)] == \
+        [(prim.host, prim.device), other]
+    # idempotent: re-adding a live replica (or the primary slot) is a no-op
+    assert d.add_replica(key, *other) is ent
+    assert d.add_replica(key, prim.host, prim.device) == prim
+    assert d.stats()["replicas_added"] == 1
+    # dropping the extra leaves the primary untouched
+    assert d.remove_replica(key, *other) is True
+    assert d.remove_replica(key, *other) is False
+    assert d.replicas(key) == [prim]
+    with pytest.raises(KeyError):
+        d.add_replica(key, 9, 0)
+    with pytest.raises(ValueError):
+        d.add_replica(key, 0, 5)
+
+
+def test_removing_primary_slot_promotes_replica():
+    d = PlacementDirectory(_hosts(n=2, devs=2))
+    key = _keys(1)[0]
+    prim = d.place(key)
+    other = (1 - prim.host, 1)
+    d.add_replica(key, *other)
+    assert d.remove_replica(key, prim.host, prim.device) is True
+    new = d.lookup(key)
+    assert (new.host, new.device) == other, \
+        "surviving replica must take over as primary"
+    assert d.stats()["replica_promotions"] == 1
+    # the promoted entry is now the whole replica set
+    assert d.replicas(key) == [new]
+
+
+def test_epoch_bump_promotes_replica_on_other_host():
+    """A restarted primary host loses its plan cache; the directory must
+    hand the key to the replica on the surviving host rather than
+    re-placing from scratch."""
+    d = PlacementDirectory(_hosts(n=2, devs=2))
+    key = _keys(1)[0]
+    prim = d.place(key)
+    other_host = 1 - prim.host
+    d.add_replica(key, other_host, 0)
+    assert d.update_host(HostInfo(prim.host, 2, epoch=7)) == 1
+    new = d.lookup(key)
+    assert (new.host, new.device) == (other_host, 0)
+    st = d.stats()
+    assert st["replica_promotions"] == 1
+    assert st["epoch_invalidations"] == 1
+
+
+def test_evict_host_promotes_surviving_replicas():
+    d = PlacementDirectory(_hosts(n=2, devs=2))
+    keys = _keys(40)
+    replicated = []
+    for k in keys:
+        p = d.place(k)
+        if p.host == 0:
+            d.add_replica(k, 1, 0)
+            replicated.append(k)
+    assert replicated, "hash spread should place some keys on host 0"
+    dropped = d.evict_host(0)
+    # every host-0 key had a replica on host 1 -> nothing actually dropped
+    assert dropped == 0
+    for k in replicated:
+        ent = d.lookup(k)
+        assert ent is not None and ent.host == 1
+    st = d.stats()
+    assert st["replica_promotions"] == len(replicated)
+    # an eviction also scrubs replicas that lived on the dead host
+    assert st["replica_entries"] == 0

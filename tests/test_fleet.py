@@ -406,3 +406,150 @@ def test_fleet_on_eight_fake_devices_subprocess():
     assert sum(rec["block_counts"]) == rec["num_blocks"]
     assert rec["block_balance"] <= 1.10
     assert max(rec["block_counts"]) - min(rec["block_counts"]) <= 1
+
+
+# ------------------------------------------------------------ replica sets
+def test_fleet_cache_add_drop_replica_roundtrip():
+    """Replica copies are independent per-shard clones: the primary stays
+    authoritative, extras stage/drop without touching it."""
+    dev = jax.devices()[0]
+    cache = FleetPlanCache([dev, dev], capacity_per_device=8)
+    cfg = PartitionConfig()
+    g = gcn_normalize(make_powerlaw_csr(n=90, seed=5))
+    plan = cache.get_or_build(g, cfg)
+    primary = cache.device_index_of(plan.key)
+    other = 1 - primary
+    assert cache.replica_devices(plan.key) == [primary]
+
+    assert cache.add_replica(plan.key, other) is True
+    assert cache.add_replica(plan.key, other) is True   # idempotent
+    assert cache.replica_devices(plan.key) == [primary, other]
+    copy = cache.plan_on(plan.key, other)
+    assert copy is not None and copy is not plan, \
+        "replica must be its own staged clone, not the primary object"
+    import numpy as np
+    np.testing.assert_array_equal(np.asarray(copy.slabs["colidx"]),
+                                  np.asarray(plan.slabs["colidx"]))
+
+    # the primary slot can never be dropped through the replica API
+    assert cache.drop_replica(plan.key, primary) is False
+    assert cache.drop_replica(plan.key, other) is True
+    assert cache.replica_devices(plan.key) == [primary]
+    assert cache.plan_on(plan.key, other) is None
+    st = cache.stats()
+    assert st["replicas_added"] == 1 and st["replicas_removed"] == 1
+
+    # replicating a key with no resident primary plan is refused
+    assert cache.add_replica(("ghost", cfg), other) is False
+
+
+def test_fleet_cache_prune_is_replica_aware():
+    """Placement pruning must not forget a key whose plan is resident only
+    on a replica shard (regression: pruning used to consult the primary
+    shard alone, so a replicated-but-primary-evicted plan lost its
+    placement and its replicas became unreachable)."""
+    dev = jax.devices()[0]
+    cache = FleetPlanCache([dev, dev], capacity_per_device=2)
+    cfg = PartitionConfig()
+    g = gcn_normalize(make_powerlaw_csr(n=90, seed=6))
+    plan = cache.get_or_build(g, cfg)
+    primary = cache.device_index_of(plan.key)
+    other = 1 - primary
+    assert cache.add_replica(plan.key, other)
+    # evict the PRIMARY copy (LRU churn elsewhere would do the same)
+    assert cache.shards[primary].remove(plan.key)
+    # churn one-off plans far past the pruning threshold
+    for i in range(8 * 2 * cache.capacity_per_device * len(cache.shards)):
+        cache.device_index_of((f"churn-{i}", cfg))
+    assert plan.key in cache._placements, \
+        "replica-resident key lost its placement to pruning"
+    assert other in cache.replica_devices(plan.key)
+    assert cache.plan_on(plan.key, other) is not None
+
+
+_ZIPF_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import sys, json, threading
+    sys.path.insert(0, "src")
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core.graph import gcn_normalize
+    from repro.data.graphs import make_power_law_graph
+    from repro.serve.fleet import FleetGraphEngine
+
+    assert len(jax.devices()) == 8
+    rng = np.random.default_rng(3)
+    graphs = {f"z{i}": gcn_normalize(make_power_law_graph(
+        220 + 40 * i, 1500 + 150 * i, seed=50 + i)) for i in range(5)}
+    feats = {k: jnp.asarray(rng.normal(size=(g.n_cols, 16)), jnp.float32)
+             for k, g in graphs.items()}
+    names = list(graphs)
+    p = np.arange(1, len(names) + 1, dtype=np.float64) ** -1.6
+    p /= p.sum()
+    schedule = [names[i] for i in
+                rng.choice(len(names), size=96, p=p)]
+
+    def run(**kw):
+        e = FleetGraphEngine(max_batch_requests=32, max_wait_ms=3.0,
+                             max_graphs_per_batch=1, backend="blocked", **kw)
+        for k, g in graphs.items():
+            e.register_graph(k, g)
+
+        def pass_once():
+            futs = [[] for _ in range(4)]
+            def sub(t):
+                futs[t] = [e.submit(gid, feats[gid])
+                           for gid in schedule[t::4]]
+            ths = [threading.Thread(target=sub, args=(t,)) for t in range(4)]
+            for t in ths: t.start()
+            for t in ths: t.join()
+            return [np.asarray(f.result()) for fs in futs for f in fs]
+
+        pass_once()              # warm: learn rates, stage replicas
+        e.reset_stats()
+        outs = pass_once()       # measured: replicated steady state
+        st = e.stats()
+        e.close()
+        return outs, st
+
+    outs_rep, st_rep = run(rate_per_replica=1.0, max_replicas=8,
+                           replica_halflife_s=4.0,
+                           replication_interval_s=0.005,
+                           split_min_requests=1)
+    outs_dis, st_dis = run(replicate_hot=False)
+    for a, b in zip(outs_rep, outs_dis):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+    print(json.dumps({
+        "promotions": st_rep["fleet_promotions"],
+        "replicated_keys": st_rep["cache_replicated_keys"],
+        "replica_copies": st_rep["cache_replica_copies"],
+        "occ_rep": st_rep["fleet_occupancy"],
+        "occ_dis": st_dis["fleet_occupancy"],
+        "req_rep": st_rep["fleet_device_requests"],
+        "req_dis": st_dis["fleet_device_requests"],
+    }))
+""")
+
+
+def test_fleet_zipf_replication_subprocess():
+    """Hot-plan replication under a zipf-skewed mix on 8 real fake devices:
+    the hot plan promotes to >= 2 replicas, its traffic spreads across
+    devices, fleet occupancy beats the single-owner run, and results match
+    the replication-disabled engine exactly."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _ZIPF_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    rec = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert rec["promotions"] >= 1
+    assert rec["replicated_keys"] >= 1
+    assert rec["replica_copies"] >= 1, \
+        "hot plan never reached a second replica"
+    # replication spreads the zipf mix over strictly more devices than the
+    # single-owner placement uses
+    assert (len([r for r in rec["req_rep"] if r > 0])
+            > len([r for r in rec["req_dis"] if r > 0]))
+    # and the measured occupancy window must improve materially
+    assert rec["occ_rep"] >= 1.5 * rec["occ_dis"], rec

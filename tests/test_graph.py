@@ -1,6 +1,5 @@
 """CSR container + O(n) preprocessing correctness."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import (

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core.graph import gcn_normalize
-from repro.core.plan_cache import PartitionConfig, PlanCache
+from repro.core.plan_cache import PlanCache
 from repro.core.spmm import make_accel_spmm
 from repro.serve.graph_engine import GraphRequest, GraphServeEngine
 

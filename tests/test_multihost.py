@@ -19,8 +19,6 @@ collectives), mirroring the 8-device subprocess check in
 import os
 import textwrap
 
-import pytest
-
 from repro.distributed.multihost import run_cpu_fleet
 
 _REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")

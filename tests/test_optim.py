@@ -1,5 +1,4 @@
 """AdamW vs a straightforward numpy reference; schedule and clipping."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,7 @@
 """Roofline machinery: HLO collective parser + term arithmetic."""
 import pytest
 
-from repro.analysis.roofline import (HW, collective_bytes, model_flops_estimate,
+from repro.analysis.roofline import (collective_bytes, model_flops_estimate,
                                      roofline_terms)
 
 HLO = """

@@ -1,9 +1,7 @@
 """Sharding rules: divisibility fallback, cache specs, param specs."""
 import types
 
-import jax
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding.rules import _leaf_spec, resolve_spec

@@ -1,5 +1,4 @@
 """Pallas SpMM kernel: shape/dtype sweep + hypothesis graphs vs ref oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.graph import degree_sort_csr, gcn_normalize
 from repro.core.partition import (block_level_partition, get_partition_patterns,
                                   pack_slabs)
-from repro.kernels.ref import csr_spmm_ref, slab_spmm_ref
+from repro.kernels.ref import csr_spmm_ref
 from repro.kernels.spmm_accel import spmm_block_slabs
 from conftest import make_powerlaw_csr
 

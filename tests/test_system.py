@@ -10,7 +10,7 @@ from repro.configs import get_reduced
 from repro.core.graph import gcn_normalize
 from repro.data.graphs import make_power_law_graph, node_features, node_labels
 from repro.data.tokens import token_batch_fn
-from repro.models.gcn import GraphOp, gcn_forward, gcn_loss, init_gcn
+from repro.models.gcn import GraphOp, gcn_loss, init_gcn
 from repro.train.loop import train_loop
 from repro.train.step import init_train_state, make_train_step
 
@@ -24,7 +24,8 @@ def test_gcn_training_reduces_loss(variant):
     y = jnp.asarray(node_labels(n, classes, 0))
     params = init_gcn(jax.random.PRNGKey(0), [d, 32, classes], variant)
 
-    loss_fn = lambda p: gcn_loss(p, aggr, X, y, variant)
+    def loss_fn(p):
+        return gcn_loss(p, aggr, X, y, variant)
     vg = jax.jit(jax.value_and_grad(loss_fn))
     l0 = float(loss_fn(params))
     lr = 0.05
@@ -67,7 +68,8 @@ def test_fault_tolerant_resume_bit_identical(tmp_path):
     uninterrupted run exactly (stateless data + deterministic step)."""
     cfg = get_reduced("qwen1.5-32b")
     bf_np = token_batch_fn(batch=2, seq=16, vocab=cfg.vocab, seed=1)
-    bf = lambda s: {k: jnp.asarray(v) for k, v in bf_np(s).items()}
+    def bf(s):
+        return {k: jnp.asarray(v) for k, v in bf_np(s).items()}
     step = jax.jit(make_train_step(cfg, loss_chunk=16, q_chunk=16, kv_chunk=16))
 
     def fresh():
