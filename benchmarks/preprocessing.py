@@ -2,9 +2,19 @@
 
 Times the full preprocessing pipeline across a size ladder and fits the
 log-log slope — O(n) <=> slope ~= 1.
+
+``run_repair`` is the streaming-update companion: incremental plan repair
+(:func:`repro.core.plan_repair.repair_plan` with the O(delta) chained key,
+exactly what the serving ``mutate()`` path runs) vs a from-scratch
+``build_partition_plan`` on the post-delta graph, at deltas of 0.1% / 1% /
+10% of nnz. Results merge into ``benchmarks/results/serve_stats.json``
+under a ``"repair"`` key; nightly CI gates ``repair_speedup >= 3x`` at the
+0.1% point via ``scripts/check_bench.py``.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -16,6 +26,10 @@ from repro.data.graphs import make_power_law_graph
 from .common import csv_row
 
 SIZES = [10_000, 30_000, 100_000, 300_000]
+
+REPAIR_N = 100_000
+REPAIR_FRACS = [0.001, 0.01, 0.10]
+REPAIR_REPEATS = 5
 
 
 def run(quiet=False):
@@ -36,6 +50,102 @@ def run(quiet=False):
     return rows
 
 
+def _sample_delta(g, frac, rng):
+    """A realistic streaming delta: deletes uniform over existing edges,
+    insert sources preferential-attachment (sampled from existing edge
+    endpoints — degree-weighted, like real edge streams on power-law
+    graphs)."""
+    from repro.core.plan_repair import EdgeDelta
+
+    k = max(1, int(g.nnz * frac))
+    kd, ki = k // 2, k - k // 2
+    eids = rng.choice(g.nnz, size=min(kd, g.nnz), replace=False)
+    dsrc = np.searchsorted(g.rowptr, eids, side="right") - 1
+    ddst = g.colidx[eids]
+    seed_e = rng.choice(g.nnz, size=ki)
+    isrc = np.searchsorted(g.rowptr, seed_e, side="right") - 1
+    idst = rng.integers(0, g.n_cols, ki)
+    return EdgeDelta(insert_src=isrc, insert_dst=idst,
+                     insert_val=rng.standard_normal(ki).astype(np.float32),
+                     delete_src=dsrc, delete_dst=ddst,
+                     on_duplicate="replace", on_missing="ignore")
+
+
+def run_repair(quiet=False):
+    """plan_repair section: incremental repair vs full rebuild per delta
+    size. Both sides consume the already-applied post-delta graph — delta
+    application is a shared cost of any update path, so the comparison
+    isolates the plan phase the repair subsystem actually replaces."""
+    from repro.core.plan_cache import PartitionConfig, build_partition_plan
+    from repro.core.plan_repair import delta_chain_hash, repair_plan
+
+    rng = np.random.default_rng(7)
+    g = gcn_normalize(make_power_law_graph(REPAIR_N, REPAIR_N * 8, seed=1))
+    cfg = PartitionConfig()
+    plan = build_partition_plan(g, cfg)
+
+    rows = []
+    stats = {}
+    for frac in REPAIR_FRACS:
+        delta = _sample_delta(g, frac, rng)
+        g_new = delta.apply(g)
+        touched = delta.touched_rows()
+        gh = delta_chain_hash(plan.graph_hash, delta)
+        # untimed warmup: first calls pay one-off jit/alloc costs on both
+        # sides, which would otherwise skew a small-repeat median
+        repair_plan(plan, g, g_new, touched, graph_hash=gh)
+        build_partition_plan(g_new, cfg)
+        reps, rebs = [], []
+        pv = None
+        for _ in range(REPAIR_REPEATS):
+            t0 = time.perf_counter()
+            pv = repair_plan(plan, g, g_new, touched, graph_hash=gh)
+            pv.plan.slabs["values"].block_until_ready()
+            reps.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            full = build_partition_plan(g_new, cfg)
+            full.slabs["values"].block_until_ready()
+            rebs.append(time.perf_counter() - t0)
+        rep_us = float(np.median(reps)) * 1e6
+        reb_us = float(np.median(rebs)) * 1e6
+        speedup = reb_us / rep_us
+        tag = f"{frac:g}"
+        stats[f"frac_{tag}"] = {
+            "delta_edges": int(delta.size),
+            "repair_us": rep_us, "rebuild_us": reb_us,
+            "speedup": speedup, "repaired": bool(pv.repaired),
+            "dirty_rows": int(pv.dirty_rows),
+        }
+        rows.append(csv_row(
+            f"repair/frac{tag}", rep_us,
+            f"rebuild_us={reb_us:.0f};speedup={speedup:.2f};"
+            f"repaired={pv.repaired};dirty_rows={pv.dirty_rows};"
+            f"delta_edges={delta.size}"))
+    # the gated headline: incremental repair at the smallest (steady-state
+    # streaming) delta must beat the rebuild it replaces by >= 3x
+    stats["repair_speedup"] = stats[f"frac_{REPAIR_FRACS[0]:g}"]["speedup"]
+
+    from .serve_graphs import RESULTS_JSON
+    merged = {}
+    if os.path.exists(RESULTS_JSON):
+        try:
+            with open(RESULTS_JSON) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged["repair"] = stats
+    os.makedirs(os.path.dirname(RESULTS_JSON), exist_ok=True)
+    with open(RESULTS_JSON, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+    rows.append(csv_row(
+        "repair/stats_json", 0.0,
+        f"speedup_at_{REPAIR_FRACS[0]:g}={stats['repair_speedup']:.2f};"
+        f"json={os.path.relpath(RESULTS_JSON)}"))
+    return rows
+
+
 if __name__ == "__main__":
     for r in run():
+        print(r)
+    for r in run_repair():
         print(r)

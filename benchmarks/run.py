@@ -5,6 +5,10 @@ Emits ``name,us_per_call,derived`` CSV. Sections:
   fig6      runtime vs RHS column dimension (16..128 + odd widths)
   table2    block-vs-warp partition + combined-warp ablations
   preproc   O(n) preprocessing scaling (paper §III-C)
+  repair    streaming-update plan repair vs full rebuild at 0.1/1/10% nnz
+            deltas (merges a "repair" key into
+            benchmarks/results/serve_stats.json; nightly gates the 0.1%
+            speedup >= 3x)
   serve     plan-cache amortization + batched multi-graph dispatch, plus
             the concurrent-submitter section (N threads of open-loop
             traffic: continuous-batching scheduler vs per-call dispatch;
@@ -63,15 +67,15 @@ def _roofline_rows():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig5,fig6,table2,preproc,serve,"
-                         "routing,fleet,multihost,moe,roofline")
+                    help="comma list: fig5,fig6,table2,preproc,repair,"
+                         "serve,routing,fleet,multihost,moe,roofline")
     ap.add_argument("--budget-edges", type=int, default=200_000)
     args = ap.parse_args()
     # multihost spawns its own 2-process fleet, so it is opt-in (not part
     # of the default sweep: nightly CI runs it explicitly)
     want = set(args.only.split(",")) if args.only else \
-        {"fig5", "fig6", "table2", "preproc", "serve", "routing", "fleet",
-         "moe", "roofline"}
+        {"fig5", "fig6", "table2", "preproc", "repair", "serve", "routing",
+         "fleet", "moe", "roofline"}
 
     print("name,us_per_call,derived")
     if "fig5" in want:
@@ -89,6 +93,10 @@ def main() -> None:
     if "preproc" in want:
         from .preprocessing import run as pp
         for r in pp():
+            print(r)
+    if "repair" in want:
+        from .preprocessing import run_repair
+        for r in run_repair():
             print(r)
     if "serve" in want:
         from .serve_graphs import run as serve

@@ -164,9 +164,20 @@ def run(budget_edges: int = 200_000, feat: int = 64) -> List[str]:
     results["speedup_vs_unbatched"] = (
         results["scheduler"]["requests_per_s"]
         / max(results["unbatched"]["requests_per_s"], 1e-9))
+    # merge over any sections another `--only` pass already wrote (repair
+    # runs BEFORE serve in a combined run — replacing the file here would
+    # silently drop its stats); our own top-level keys still overwrite
+    merged = {}
+    if os.path.exists(RESULTS_JSON):
+        try:
+            with open(RESULTS_JSON) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged.update(results)
     os.makedirs(os.path.dirname(RESULTS_JSON), exist_ok=True)
     with open(RESULTS_JSON, "w") as f:
-        json.dump(results, f, indent=2, sort_keys=True)
+        json.dump(merged, f, indent=2, sort_keys=True)
     rows.append(csv_row(
         "serve/concurrent_speedup", 0.0,
         f"scheduler_vs_unbatched={results['speedup_vs_unbatched']:.2f}x;"

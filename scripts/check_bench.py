@@ -2,11 +2,13 @@
 """Benchmark acceptance + regression gate for nightly CI.
 
 Reads a fresh ``benchmarks/results/serve_stats.json`` (produced by
-``python -m benchmarks.run --only serve,routing,fleet[,multihost]``) and
+``python -m benchmarks.run --only serve,routing,fleet[,repair,multihost]``)
+and
 
 * asserts the ABSOLUTE acceptance properties of the serving stack
   (cross-caller coalescing, fleet-vs-single coalescing, block-shard
-  balance, zipf hot-plan replication), and
+  balance, zipf hot-plan replication, incremental plan repair >= 3x a
+  full rebuild at 0.1% churn), and
 * compares throughput rows against a COMMITTED baseline
   (``benchmarks/baselines/serve_stats.baseline.json``), failing on a
   >20% drop so perf regressions surface as red nightlies instead of
@@ -112,8 +114,30 @@ def check_serving(g: Gate, s: Dict, *, parallel: bool) -> None:
                f"launches cannot overlap without cores")
 
 
+def check_repair(g: Gate, s: Dict) -> None:
+    r = s.get("repair")
+    if r is None:
+        g.check(False, "repair section present in results "
+                       "(run benchmarks with --only repair)")
+        return
+    sp = r["repair_speedup"]
+    g.check(sp >= 3.0,
+            f"incremental plan repair at 0.1% nnz churn: {sp:.2f}x >= 3x "
+            f"over full rebuild")
+    for key, frac in sorted(
+            (k, k.split("_", 1)[1]) for k in r if k.startswith("frac_")):
+        fr = r[key]
+        g.check(fr["speedup"] >= 1.0 if fr["repaired"] else True,
+                f"repair at {frac} churn never slower than rebuild: "
+                f"{fr['speedup']:.2f}x (repaired={fr['repaired']})")
+
+
 def check_multihost(g: Gate, s: Dict) -> None:
-    mh = s["multihost"]
+    mh = s.get("multihost")
+    if mh is None:
+        g.check(False, "multihost section present in results "
+                       "(run benchmarks with --only multihost)")
+        return
     hp = mh["host_placements"]
     g.check(len(hp) == 2 and all(c >= 1 for c in hp),
             f"directory spread plans across both hosts: {hp}")
@@ -158,6 +182,9 @@ def main(argv=None) -> int:
     ap.add_argument("--require-multihost", action="store_true",
                     help="also gate the multihost section (nightly runs "
                          "it; quick local runs may not)")
+    ap.add_argument("--require-repair", action="store_true",
+                    help="also gate the plan-repair section (produced by "
+                         "--only repair; nightly runs it)")
     ap.add_argument("--parallel", choices=["auto", "on", "off"],
                     default="auto",
                     help="enforce the parallel-hardware gates (occupancy "
@@ -179,6 +206,11 @@ def main(argv=None) -> int:
     else:
         g.info("multihost section absent, skipped "
                "(pass --require-multihost to make that a failure)")
+    if args.require_repair or "repair" in s:
+        check_repair(g, s)
+    else:
+        g.info("repair section absent, skipped "
+               "(pass --require-repair to make that a failure)")
     check_regression(g, s, args.baseline)
 
     if g.failures:

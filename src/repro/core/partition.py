@@ -33,7 +33,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from .graph import CSRGraph
+from .graph import CSRGraph, _concat_ranges
 
 __all__ = [
     "PartitionPatterns",
@@ -274,7 +274,7 @@ def warp_level_partition(g: CSRGraph, ng_size: int = 32) -> WarpPartition:
 # Kernel-side packed slabs
 # ---------------------------------------------------------------------------
 def pack_slabs(
-    g: CSRGraph, bp: BlockPartition
+    g: CSRGraph, bp: BlockPartition, R: int | None = None
 ) -> Dict[str, np.ndarray]:
     """Materialize fixed-capacity per-block slabs for the Pallas/jnp kernels.
 
@@ -286,31 +286,48 @@ def pack_slabs(
       out_row int32[B, R]  global output row per local row (n sentinel = drop)
       R, C                 python ints
     Every non-zero lands in exactly one slab slot.
+
+    ``R`` may be forced wider than this partition strictly needs — incremental
+    plan repair packs just the dirty block range with the FULL plan's R so the
+    spliced slabs stay rectangular (and the rowloc/out_row sentinels match the
+    untouched blocks bit for bit).
     """
     B = bp.num_blocks
     C = bp.patterns.deg_bound
-    R = int(bp.n_rows_blk.max()) if B else 1
-    colidx = np.zeros((B, C), dtype=np.int32)
-    values = np.zeros((B, C), dtype=np.float32)
-    rowloc = np.full((B, C), R - 1 if R > 0 else 0, dtype=np.int32)
-    out_row = np.full((B, R), bp.n_rows, dtype=np.int32)  # sentinel drop row
+    need = int(bp.n_rows_blk.max()) if B else 1
+    if R is None:
+        R = need
+    elif R < need:
+        raise ValueError(f"forced R={R} < max rows/block {need}")
+    if B == 0:
+        return {"colidx": np.zeros((0, C), dtype=np.int32),
+                "values": np.zeros((0, C), dtype=np.float32),
+                "rowloc": np.full((0, C), R - 1 if R > 0 else 0,
+                                  dtype=np.int32),
+                "out_row": np.full((0, R), bp.n_rows, dtype=np.int32),
+                "R": R, "C": C}
 
-    deg = bp.meta[:, 0]
-    loc = bp.meta[:, 1]
-    row = bp.meta[:, 2]
-    for b in range(B):
-        nb = int(bp.nnz_blk[b])
-        lo = int(loc[b])
-        colidx[b, :nb] = g.colidx[lo : lo + nb]
-        values[b, :nb] = g.values[lo : lo + nb]
-        if bp.is_split[b]:
-            rowloc[b, :nb] = 0
-            out_row[b, 0] = row[b]
-        else:
-            d = int(deg[b])
-            nr = int(bp.n_rows_blk[b])
-            rowloc[b, :nb] = np.repeat(np.arange(nr, dtype=np.int32), d)
-            out_row[b, :nr] = row[b] + np.arange(nr, dtype=np.int32)
+    # Fully vectorized: block b's non-zeros live at CSR offsets
+    # [loc_b, loc_b + nnz_b). A padded (B, C) gather + validity mask
+    # replaces the per-block python loop — slot j of block b reads CSR
+    # offset loc_b + j when j < nnz_b, else keeps the pad value.
+    loc = bp.meta[:, 1].astype(np.int64)
+    slot = np.arange(C, dtype=np.int32)[None, :]
+    valid = slot < bp.nnz_blk[:, None]
+    idx = np.minimum(loc[:, None] + slot, max(g.nnz - 1, 0))
+    colidx = np.where(valid, g.colidx[idx], 0).astype(np.int32, copy=False)
+    values = np.where(valid, g.values[idx], np.float32(0)).astype(
+        np.float32, copy=False)
+    # local output row per slot: slot j of a pattern block of degree d
+    # serves local row j // d; split blocks emit a single local row 0
+    d = np.maximum(bp.meta[:, 0], 1)[:, None]
+    local = np.where(bp.is_split[:, None], 0, slot // d)
+    rowloc = np.where(valid, local, R - 1).astype(np.int32, copy=False)
+    # global output row per local row: row_b + arange(n_rows_blk_b)
+    slot_r = np.arange(R, dtype=np.int32)[None, :]
+    valid_r = slot_r < bp.n_rows_blk[:, None]
+    out_row = np.where(valid_r, bp.meta[:, 2][:, None] + slot_r,
+                       bp.n_rows).astype(np.int32, copy=False)
     return {"colidx": colidx, "values": values, "rowloc": rowloc,
             "out_row": out_row, "R": R, "C": C}
 

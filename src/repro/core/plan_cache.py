@@ -96,6 +96,11 @@ class PartitionPlan:
     coo_row: jax.Array
     coo_col: jax.Array
     coo_val: jax.Array
+    # monotone stamp in a graph's plan chain (0 = first build; incremental
+    # repair / mutation bumps it — see core/plan_repair.py). The content
+    # hash in ``key`` still changes with every version: the version is the
+    # lineage, the hash is the identity.
+    version: int = 0
 
     @property
     def graph_hash(self) -> str:
@@ -137,14 +142,14 @@ def build_partition_plan(g: CSRGraph, cfg: PartitionConfig,
     inv_perm[gs.perm] = np.arange(gs.n_rows)
 
     # COO is cheap to keep and doubles as the gradient/baseline path.
-    row_of = np.repeat(np.arange(g.n_rows), np.diff(g.rowptr))
+    row_of = np.repeat(np.arange(g.n_rows, dtype=np.int32), np.diff(g.rowptr))
     return PartitionPlan(
         key=(graph_hash or graph_content_hash(g), cfg),
         n_rows=g.n_rows, n_cols=g.n_cols, nnz=g.nnz,
         slabs=slabs, inv_perm=jnp.asarray(inv_perm), partition=bp,
         coo_row=jnp.asarray(row_of),
         coo_col=jnp.asarray(g.colidx),
-        coo_val=jnp.asarray(g.values.astype(np.float32)),
+        coo_val=jnp.asarray(np.asarray(g.values, dtype=np.float32)),
     )
 
 
@@ -188,6 +193,11 @@ class PlanCache:
             OrderedDict()
         self._lock = threading.RLock()
         self._inflight: Dict[Tuple[str, PartitionConfig], threading.Event] = {}
+        # version lifecycle: reader refcounts per key (a dispatch pins the
+        # plan version it resolved for its whole duration) and retired
+        # versions parked until their last pin drains
+        self._pins: Dict[Tuple[str, PartitionConfig], int] = {}
+        self._retired: Dict[Tuple[str, PartitionConfig], PartitionPlan] = {}
         self.lookups = 0        # == hits + misses, bumped under the SAME
         #                         lock hold (the stats-atomicity witness)
         self.hits = 0
@@ -196,6 +206,9 @@ class PlanCache:
         self.builds = 0
         self.spills = 0
         self.disk_hits = 0
+        self.publishes = 0
+        self.retired_versions = 0   # old versions parked behind live pins
+        self.retired_reclaimed = 0  # parked versions whose pins drained
 
     def __len__(self) -> int:
         with self._lock:
@@ -296,6 +309,87 @@ class PlanCache:
         with self._lock:
             return self._plans.pop(key, None) is not None
 
+    # -------------------------------------------------------- version chain
+    def pin(self, key) -> int:
+        """A reader (one in-flight dispatch) holds this plan version: its
+        key cannot be silently discarded by :meth:`retire` until the
+        matching :meth:`unpin`. Returns the new refcount. Pin/unpin must
+        balance — the concurrency tests assert refcounts drain to zero."""
+        with self._lock:
+            c = self._pins.get(key, 0) + 1
+            self._pins[key] = c
+            return c
+
+    def unpin(self, key) -> int:
+        """Release one reader pin; when the last pin of a RETIRED version
+        drains, the parked plan is reclaimed. Returns the remaining count."""
+        with self._lock:
+            c = self._pins.get(key, 0) - 1
+            if c > 0:
+                self._pins[key] = c
+                return c
+            self._pins.pop(key, None)
+            if self._retired.pop(key, None) is not None:
+                self.retired_reclaimed += 1
+            return 0
+
+    def retire(self, key) -> bool:
+        """Remove a superseded version from the serving set. Unpinned
+        versions drop immediately (no spill — stale content must not be
+        resurrected by a disk hit racing the publish); pinned versions PARK
+        until their readers drain, so an in-flight dispatch keeps a
+        reachable plan for its whole duration. Returns True if the key was
+        resident or parked."""
+        with self._lock:
+            plan = self._plans.pop(key, None)
+            if plan is None:
+                return key in self._retired
+            if self._pins.get(key, 0) > 0:
+                self._retired[key] = plan
+                self.retired_versions += 1
+            return True
+
+    # uniform names with FleetPlanCache (whose bare ``pin`` records
+    # directory-dictated placements), so the engines stay cache-agnostic
+    def pin_version(self, key) -> int:
+        return self.pin(key)
+
+    def unpin_version(self, key) -> int:
+        return self.unpin(key)
+
+    def publish(self, plan: PartitionPlan, retire_key=None) -> PartitionPlan:
+        """Atomically make ``plan`` the current version and retire the one
+        it supersedes: readers either resolve the old key (still parked if
+        pinned) or the new one — never a torn in-between. Spilling of any
+        capacity eviction happens outside the lock as usual."""
+        with self._lock:
+            evicted = self._insert_locked(plan.key, plan)
+            if retire_key is not None and retire_key != plan.key:
+                old = self._plans.pop(retire_key, None)
+                if old is not None and self._pins.get(retire_key, 0) > 0:
+                    self._retired[retire_key] = old
+                    self.retired_versions += 1
+            self.publishes += 1
+        self._spill_evicted(evicted)
+        return plan
+
+    def apply_delta(self, key, g_old: CSRGraph, delta, *,
+                    churn_threshold: float = 0.25):
+        """Repair the plan under ``key`` for an edge delta and publish the
+        next version in one step. ``g_old`` is the pre-delta graph the key
+        was built from (rebuilt here if the plan was evicted meanwhile).
+        Returns ``(g_new, PlanVersion)`` — the caller re-binds its
+        graph_id to ``pv.plan.key`` and pushes the new graph content.
+        """
+        from .plan_repair import apply_and_repair   # circular at module load
+        plan = self.get_by_key(
+            key, lambda: build_partition_plan(g_old, key[1],
+                                              graph_hash=key[0]))
+        g_new, pv = apply_and_repair(plan, g_old, delta,
+                                     churn_threshold=churn_threshold)
+        self.publish(pv.plan, retire_key=key)
+        return g_new, pv
+
     def clear(self) -> None:
         with self._lock:
             self._plans.clear()
@@ -319,6 +413,7 @@ class PlanCache:
             "n_rows": np.int64(plan.n_rows),
             "n_cols": np.int64(plan.n_cols),
             "nnz": np.int64(plan.nnz),
+            "version": np.int64(plan.version),
             "slab_R": np.int64(plan.slabs["R"]),
             "slab_C": np.int64(plan.slabs["C"]),
             "slab_colidx": np.asarray(plan.slabs["colidx"]),
@@ -387,6 +482,8 @@ class PlanCache:
                     coo_row=jnp.asarray(z["coo_row"]),
                     coo_col=jnp.asarray(z["coo_col"]),
                     coo_val=jnp.asarray(z["coo_val"]),
+                    # pre-versioning spills reload as version 0
+                    version=int(z["version"]) if "version" in z else 0,
                 )
         except Exception:       # corrupt/partial/alien spill (BadZipFile,
             return None         # KeyError, OSError, ...): rebuild instead
@@ -412,6 +509,11 @@ class PlanCache:
                 "evictions": self.evictions,
                 "spills": self.spills,
                 "disk_hits": self.disk_hits,
+                "publishes": self.publishes,
+                "pins": sum(self._pins.values()),
+                "retired_versions": self.retired_versions,
+                "retired_reclaimed": self.retired_reclaimed,
+                "retired_live": len(self._retired),
                 "hit_rate": self.hits / total if total else 0.0,
                 "device_bytes": sum(p.device_bytes()
                                     for p in self._plans.values()),

@@ -107,6 +107,13 @@ class PlacementDirectory:
         self._slots: List[Tuple[int, int]] = []
         self._ring: Optional[ConsistentHashRing] = None
         self._rebuild_ring_locked()
+        # versioned plan chains: graph_id -> (current plan key, version).
+        # Publishing a newer version drops the OLD key's primary and every
+        # replica, so no host can resolve a stale epoch through this
+        # directory — and because record_version is deterministic (pure
+        # function of its arguments), every host's directory converges on
+        # the same current key without coordination.
+        self._versions: Dict[str, Tuple[object, int]] = {}
         # monotone counters (the fleet_* stats vocabulary feeds off these)
         self.placement_overrides = 0
         self.epoch_invalidations = 0   # entries dropped by a host restart
@@ -115,6 +122,7 @@ class PlacementDirectory:
         self.replicas_removed = 0
         self.replica_promotions = 0    # replica became primary on owner loss
         self.replica_invalidations = 0  # stale replicas scrubbed
+        self.version_invalidations = 0  # keys dropped by a newer plan version
 
     # ------------------------------------------------------------------ ring
     def _rebuild_ring_locked(self) -> None:
@@ -238,12 +246,68 @@ class PlacementDirectory:
                     counts[i] += 1
         return counts
 
+    def place_at(self, key, host: int, device: int) -> Placement:
+        """Record the primary owner of ``key`` at an EXPLICIT slot.
+
+        The version-publish path uses this to keep a mutated graph's new
+        plan key on the slot that already holds the superseded version —
+        sticky ownership across versions, so warmed device state, replica
+        history, and pin markers stay meaningful. Deterministic given the
+        same host table, like :meth:`record_version`, so every host's
+        directory converges on the same owner without coordination.
+        Stamped with the host's CURRENT epoch; overwrites any prior
+        primary for the key. Raises on unknown hosts / bad devices.
+        """
+        with self._lock:
+            hinfo = self._hosts.get(host)
+            if hinfo is None:
+                raise KeyError(f"unknown host rank {host}")
+            if not 0 <= device < hinfo.n_devices:
+                raise ValueError(
+                    f"host {host} has {hinfo.n_devices} devices, "
+                    f"no device {device}")
+            ent = Placement(host, device, hinfo.epoch)
+            self._entries[key] = ent
+            return ent
+
     def release(self, key) -> None:
         """Forget a key entirely — primary AND every replica. For dropping
         a single slot of a replicated key, use :meth:`remove_replica`."""
         with self._lock:
             self._entries.pop(key, None)
             self._replica_entries.pop(key, None)
+
+    # -------------------------------------------------------------- versions
+    def record_version(self, graph_id: str, key, version: int) -> bool:
+        """Record that ``graph_id`` is now served by plan ``key`` at
+        ``version``. A NEWER version invalidates the superseded key — its
+        primary placement and every replica drop, so a forwarded request
+        can never resolve to a host still holding the retired epoch (it
+        re-places the new key instead). A stale or duplicate publish
+        (``version <=`` the recorded one) is ignored, which makes
+        concurrent/out-of-order announcements from several hosts converge:
+        the call is a pure function of ``(graph_id, key, version)`` against
+        the monotone version chain. Returns True when the record advanced.
+        """
+        with self._lock:
+            cur = self._versions.get(graph_id)
+            if cur is not None:
+                cur_key, cur_ver = cur
+                if version <= cur_ver:
+                    return False
+                if cur_key != key:
+                    dropped = int(self._entries.pop(cur_key, None)
+                                  is not None)
+                    dropped += len(self._replica_entries.pop(cur_key, ()))
+                    self.version_invalidations += dropped
+            self._versions[graph_id] = (key, int(version))
+            return True
+
+    def current_version(self, graph_id: str) -> Optional[Tuple[object, int]]:
+        """The recorded ``(plan key, version)`` of ``graph_id`` (None if
+        the graph was never versioned through this directory)."""
+        with self._lock:
+            return self._versions.get(graph_id)
 
     # -------------------------------------------------------------- replicas
     def replicas(self, key) -> List[Placement]:
@@ -413,4 +477,6 @@ class PlacementDirectory:
                 "replicas_removed": self.replicas_removed,
                 "replica_promotions": self.replica_promotions,
                 "replica_invalidations": self.replica_invalidations,
+                "versioned_graphs": len(self._versions),
+                "version_invalidations": self.version_invalidations,
             }

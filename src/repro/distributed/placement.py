@@ -121,6 +121,10 @@ class FleetPlanCache:
         # and pinned keys are exempt from placement pruning
         self._replicas: Dict[Tuple[str, PartitionConfig], List[int]] = {}
         self._pinned: Set[Tuple[str, PartitionConfig]] = set()
+        # version pins route to the shard that was serving the key when its
+        # first reader pinned it — the placement may be gone by unpin time
+        # (publish retires superseded keys), so the shard is remembered here
+        self._vpins: Dict[Tuple[str, PartitionConfig], int] = {}
         self.placement_overrides = 0   # load-aware departures from the ring
         self.replicas_added = 0
         self.replicas_removed = 0
@@ -265,6 +269,91 @@ class FleetPlanCache:
         """The resident plan copy on one specific shard (None if absent)."""
         return self.shards[device_index].lookup(key)
 
+    # -------------------------------------------------------- version chain
+    def pin_version(self, key: Tuple[str, PartitionConfig]) -> int:
+        """Pin a reader's plan version on its serving shard (see
+        :meth:`~repro.core.plan_cache.PlanCache.pin`). Returns the new
+        refcount, or 0 when the key has no placement to pin against."""
+        with self._lock:
+            dev = self._vpins.get(key)
+            if dev is None:
+                dev = self._placements.get(key)
+                if dev is None:
+                    return 0
+                self._vpins[key] = dev
+        return self.shards[dev].pin(key)
+
+    def unpin_version(self, key: Tuple[str, PartitionConfig]) -> int:
+        """Release one reader pin (reclaims a retired version when the last
+        pin drains). Routed by the shard remembered at pin time — the
+        placement itself may already belong to a successor version."""
+        with self._lock:
+            dev = self._vpins.get(key)
+        if dev is None:
+            return 0
+        c = self.shards[dev].unpin(key)
+        if c == 0:
+            with self._lock:
+                self._vpins.pop(key, None)
+        return c
+
+    def retire(self, key: Tuple[str, PartitionConfig]) -> bool:
+        """Retire a superseded key on EVERY shard (see
+        :meth:`~repro.core.plan_cache.PlanCache.retire`) and drop its
+        placement / replica / pin bookkeeping. The NON-owning hosts of a
+        multihost mutation use this: they have no successor plan to
+        publish locally, but a stale copy of the retired version (e.g. a
+        replica staged onto this host) must not outlive its epoch. Returns
+        True if any shard actually held the key."""
+        any_retired = False
+        for s in self.shards:
+            any_retired = s.retire(key) or any_retired
+        with self._lock:
+            self._placements.pop(key, None)
+            self._replicas.pop(key, None)
+            self._pinned.discard(key)
+        return any_retired
+
+    def publish(self, plan: PartitionPlan, retire_key=None) -> PartitionPlan:
+        """Publish the next version of a graph's plan fleet-wide (same
+        shape as :meth:`PlanCache.publish`, which makes the serving
+        engines' publish hook cache-agnostic):
+
+        1. the new key inherits the retired key's PRIMARY device (sticky
+           placement across versions — replicas, pinned directories, and
+           warmed HBM stay meaningful), staged and inserted atomically on
+           that shard;
+        2. every replica device of the retired key gets a re-staged copy
+           of the NEW version (hot graphs stay hot through a mutation);
+        3. the retired key drops from every shard (parking per-shard where
+           readers still pin it), its placement, replica list, and pin
+           marker with it.
+        """
+        with self._lock:
+            primary = None
+            extras: List[int] = []
+            if retire_key is not None:
+                primary = self._placements.get(retire_key)
+                extras = list(self._replicas.get(retire_key, ()))
+            if primary is None:
+                primary = self._place_locked(plan.key)
+            else:
+                self._placements[plan.key] = primary
+            if retire_key in self._pinned:
+                self._pinned.add(plan.key)
+        staged = self._ensure_staged(plan, self.devices[primary])
+        self.shards[primary].publish(staged)
+        for dev in extras:
+            self.add_replica(plan.key, dev)
+        if retire_key is not None and retire_key != plan.key:
+            for s in self.shards:
+                s.retire(retire_key)
+            with self._lock:
+                self._placements.pop(retire_key, None)
+                self._replicas.pop(retire_key, None)
+                self._pinned.discard(retire_key)
+        return staged
+
     # --------------------------------------------------------------- lookups
     def get_or_build(self, g: CSRGraph, cfg: PartitionConfig) -> PartitionPlan:
         key = (graph_content_hash(g), cfg)
@@ -358,7 +447,8 @@ class FleetPlanCache:
         per = [s.stats() for s in self.shards]
         agg: Dict[str, float] = {}
         for k in ("size", "lookups", "hits", "misses", "builds", "evictions",
-                  "spills", "disk_hits", "device_bytes"):
+                  "spills", "disk_hits", "device_bytes", "publishes", "pins",
+                  "retired_versions", "retired_reclaimed", "retired_live"):
             agg[k] = sum(p[k] for p in per)
         total = agg["hits"] + agg["misses"]
         agg["capacity"] = self.capacity_per_device * len(self.shards)

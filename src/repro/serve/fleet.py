@@ -68,6 +68,7 @@ from ..core.graph import CSRGraph, gcn_normalize
 from ..core.plan_cache import (
     PartitionConfig, PartitionPlan, build_partition_plan, graph_content_hash,
 )
+from ..core.plan_repair import EdgeDelta, delta_chain_hash, repair_plan
 from ..distributed.directory import HostInfo, PlacementDirectory
 from ..distributed.multihost import (
     MultihostContext, PeerClient, PeerServer, peer_ports,
@@ -235,7 +236,7 @@ class FleetGraphEngine(GraphServeEngine):
             self._t_last_done = None
 
     # ------------------------------------------------------------------ flush
-    def _flush(self, items: List[WorkItem]) -> None:
+    def _flush_reads(self, items: List[WorkItem]) -> None:
         """Group by graph, route each group, launch per-device CONCURRENTLY.
 
         Runs on the scheduler thread; per-device and sharded launches run on
@@ -251,7 +252,21 @@ class FleetGraphEngine(GraphServeEngine):
         """
         order, groups = self._group_by_graph(items)
         plans = {gid: self.plan_for(gid) for gid in order}
+        # version-pin each plan for the round: a concurrent publish retires
+        # the superseded version but cannot reclaim it under a dispatch
+        pinned = [p.key for p in plans.values()]
+        for k in pinned:
+            self.cache.pin_version(k)
+        try:
+            self._flush_routed(order, groups, plans)
+        finally:
+            for k in pinned:
+                self.cache.unpin_version(k)
 
+    def _flush_routed(self, order: List[str],
+                      groups: Dict[str, List[WorkItem]],
+                      plans: Dict[str, PartitionPlan]) -> None:
+        """Route + launch one round of already-grouped read work."""
         # counted at flush start so a stats() read racing the final
         # future resolution never sees requests from an uncounted round
         with self._counters_lock:
@@ -539,8 +554,9 @@ class FleetGraphEngine(GraphServeEngine):
     # the multihost subclass keeps per-graph flush groups intact; factoring
     # the split point here keeps ONE grouping implementation
     def _flush_items_locally(self, items: List[WorkItem]) -> None:
-        """Serve a subset of a flush entirely on this host's devices."""
-        FleetGraphEngine._flush(self, items)
+        """Serve a subset of a flush (always READ items — mutations are
+        never forwarded or failed over) entirely on this host's devices."""
+        FleetGraphEngine._flush_reads(self, items)
 
     # ------------------------------------------------------------------ stats
     def _stats_locked(self, s: Dict[str, float]) -> Dict[str, float]:
@@ -689,6 +705,7 @@ class MultihostGraphEngine(FleetGraphEngine):
                                  epoch=context.epoch,
                                  n_devices=context.n_local_devices)
         self.server.register("serve", self._handle_peer_serve)
+        self.server.register("mutate", self._handle_peer_mutate)
         if peer_addresses is None:
             peer_addresses = {r: ("127.0.0.1", p) for r, p in ports.items()
                               if r != self.process_index}
@@ -705,6 +722,9 @@ class MultihostGraphEngine(FleetGraphEngine):
         self.forward_busy_s = 0.0
         self.host_failovers = 0
         self.global_dispatches = 0
+        self.mutation_broadcasts = 0          # peer deliveries of a mutation
+        self.mutation_broadcast_failures = 0  # peers a broadcast missed
+        self.remote_mutations = 0             # mutations applied for a peer
         # consecutive transport failures per peer: a single slow request
         # (socket timeout on a busy owner) serves locally but keeps the
         # placements — only a PERSISTENT failure evicts the host
@@ -779,8 +799,22 @@ class MultihostGraphEngine(FleetGraphEngine):
         if normalize:
             g = gcn_normalize(g)
         key = (graph_content_hash(g), self.config)
-        self._graphs[graph_id] = g
-        self._keys[graph_id] = key
+        with self._bind_lock:
+            prev_key = self._keys.get(graph_id)
+            prev_ver = self._versions.get(graph_id)
+            if prev_key == key and prev_ver is not None:
+                version = prev_ver      # idempotent re-register
+            elif prev_ver is not None:
+                version = prev_ver + 1  # content replacement: chain advances
+            else:
+                version = 0
+            self._graphs[graph_id] = g
+            self._keys[graph_id] = key
+            self._versions[graph_id] = version
+        # seed the version chain fleet-wide: deterministic on every host,
+        # so the first mutate's record_version(v+1) invalidates this key
+        # everywhere without coordination
+        self.directory.record_version(graph_id, key, version)
         placement = self.directory.place(key)
         if placement.host != self.process_index:
             return None
@@ -790,12 +824,14 @@ class MultihostGraphEngine(FleetGraphEngine):
                                               graph_hash=key[0]))
 
     # ------------------------------------------------------------------ flush
-    def _flush(self, items: List[WorkItem]) -> None:
-        """Split the flush by owning host FIRST; the local share then runs
-        the inherited per-device concurrent path while remote shares
-        forward concurrently from the pool (one task per owner host)."""
+    def _flush_reads(self, items: List[WorkItem]) -> None:
+        """Split the read share of a flush by owning host FIRST; the local
+        share then runs the inherited per-device concurrent path while
+        remote shares forward concurrently from the pool (one task per
+        owner host). Mutations never reach here — the base ``_flush``
+        wrapper splits them out and routes them via ``_apply_mutation``."""
         if self.process_count <= 1 or not self.peers:
-            return super()._flush(items)
+            return super()._flush_reads(items)
         order, groups = self._group_by_graph(items)
         local: List[WorkItem] = []
         by_host: Dict[int, List[Tuple[str, List[WorkItem]]]] = {}
@@ -819,7 +855,7 @@ class MultihostGraphEngine(FleetGraphEngine):
         first_exc: Optional[BaseException] = None
         if local:
             try:
-                super()._flush(local)
+                super()._flush_reads(local)
             except BaseException as e:  # noqa: BLE001 — re-raised below
                 first_exc = e
         for f in futs:
@@ -891,6 +927,139 @@ class MultihostGraphEngine(FleetGraphEngine):
             with self._counters_lock:
                 self.forward_busy_s += dt
 
+    # --------------------------------------------------------------- mutation
+    def _apply_mutation(self, gid: str, grp: List[WorkItem]) -> None:
+        """Fleet-wide mutation: apply + publish locally, then broadcast the
+        SAME delta sequence to every peer over the data plane.
+
+        Every host runs the identical deterministic transition
+        (:meth:`_apply_deltas_local`), so the fleet converges without a
+        coordinator: same deltas -> same new graph -> same content-hash key
+        -> same directory record. Writer discipline is SINGLE WRITER PER
+        GRAPH (any host may be that writer): two hosts mutating one graph
+        concurrently race their broadcasts and the version-fork guard on
+        the receiving side fails the later one rather than silently
+        diverging. A peer the broadcast cannot reach keeps serving its old
+        binding until it rejoins — the directory record (replayed by every
+        reachable host) already stops requests from being FORWARDED to it
+        for this graph's new key.
+        """
+        deltas: List[EdgeDelta] = [it.payload[1] for it in grp]
+        info = self._apply_deltas_local(gid, deltas)
+        if self.process_count > 1 and self.peers:
+            payload = {"graph_id": gid, "deltas": deltas,
+                       "base_version": info["version"] - 1}
+            for rank, client in sorted(self.peers.items()):
+                try:
+                    client.request("mutate", payload)
+                    with self._counters_lock:
+                        self.mutation_broadcasts += 1
+                        self._peer_failures[rank] = 0
+                except ConnectionError:
+                    with self._counters_lock:
+                        self.mutation_broadcast_failures += 1
+        for it in grp:
+            it.complete(dict(info))
+
+    def _handle_peer_mutate(self, payload: Dict) -> Dict:
+        """Data-plane handler: replay a peer's mutation on this host.
+
+        Runs inline on the connection thread (like ``serve``); the version
+        fork guard raises back to the writer if this host's chain is not
+        at the broadcast's base version.
+        """
+        gid = payload["graph_id"]
+        with self._bind_lock:
+            if gid not in self._graphs:
+                raise KeyError(
+                    f"graph {gid!r} not registered on host "
+                    f"{self.process_index}")
+        info = self._apply_deltas_local(
+            gid, payload["deltas"],
+            expect_base=payload.get("base_version"))
+        with self._counters_lock:
+            self.remote_mutations += 1
+        return {"graph_id": gid, "version": info["version"]}
+
+    def _apply_deltas_local(self, gid: str, deltas: Sequence[EdgeDelta],
+                            expect_base: Optional[int] = None) -> Dict:
+        """One host's share of a fleet mutation (deterministic transition).
+
+        Applies the deltas SEQUENTIALLY, advances the version chain in the
+        directory (sticky owner slot via :meth:`PlacementDirectory.place_at`),
+        and — only on the owner host — repairs and publishes the plan; the
+        other hosts re-bind and retire their stale copies. With
+        ``expect_base`` set (a replayed broadcast), a chain not at that
+        version raises instead of forking.
+        """
+        with self._mutate_lock:
+            with self._bind_lock:
+                g_old = self._graphs[gid]
+                old_key = self._keys[gid]
+                cur_ver = self._versions[gid]
+            if expect_base is not None and cur_ver != expect_base:
+                raise RuntimeError(
+                    f"mutation version fork on {gid!r}: host "
+                    f"{self.process_index} is at v{cur_ver}, writer "
+                    f"published against v{expect_base} — one writer per "
+                    f"graph at a time")
+            g_new = g_old
+            touched: List[np.ndarray] = []
+            n_edges = 0
+            gh = old_key[0]
+            for d in deltas:
+                g_new = d.apply(g_new)
+                touched.append(d.touched_rows())
+                n_edges += d.size
+                gh = delta_chain_hash(gh, d)
+            # O(delta) chained key: every host chains the same deltas onto
+            # the same parent hash, so the fleet converges on one key
+            # without re-hashing the whole graph
+            new_key = (gh, self.config)
+            version = cur_ver + 1
+            # deterministic directory transition: resolve the CURRENT
+            # owner, advance the chain (drops the old key fleet-wide),
+            # re-pin the new key to the same slot
+            owner = self.directory.place(old_key)
+            self.directory.record_version(gid, new_key, version)
+            self.directory.place_at(new_key, owner.host, owner.device)
+            repaired, reason, dirty = False, "non-owner rebind", 0
+            if owner.host == self.process_index:
+                plan_old = self.cache.lookup(old_key)
+                if plan_old is not None:
+                    pv = repair_plan(
+                        plan_old, g_old, g_new,
+                        (np.unique(np.concatenate(touched)) if touched
+                         else np.empty(0, np.int64)),
+                        churn_threshold=self.repair_churn_threshold,
+                        graph_hash=gh)
+                    plan_new = pv.plan
+                    repaired, reason, dirty = (pv.repaired, pv.reason,
+                                               pv.dirty_rows)
+                else:       # owner copy LRU-evicted: nothing to repair from
+                    plan_new = build_partition_plan(
+                        g_new, self.config, graph_hash=new_key[0])
+                    reason = "owner plan not resident; full build"
+                plan_new.version = version
+                self.cache.pin(new_key, owner.device)
+                self.cache.publish(plan_new, retire_key=old_key)
+            else:
+                self.cache.retire(old_key)
+            with self._bind_lock:
+                self._graphs[gid] = g_new
+                self._keys[gid] = new_key
+                self._versions[gid] = version
+            with self._counters_lock:
+                self.mutations_applied += len(deltas)
+                self.mutation_edges += n_edges
+                if owner.host == self.process_index:
+                    if repaired:
+                        self.plan_repairs += 1
+                    else:
+                        self.plan_rebuilds += 1
+        return {"graph_id": gid, "version": version, "repaired": repaired,
+                "reason": reason, "dirty_rows": dirty}
+
     # ----------------------------------------------------------------- global
     def serve_global(self, graph_id: str, x: jax.Array) -> jax.Array:
         """COLLECTIVE whole-fleet dispatch of one graph (SPMD contract:
@@ -951,6 +1120,9 @@ class MultihostGraphEngine(FleetGraphEngine):
             fleet_forward_busy_s=self.forward_busy_s,
             fleet_host_failovers=self.host_failovers,
             fleet_global_dispatches=self.global_dispatches,
+            fleet_mutation_broadcasts=self.mutation_broadcasts,
+            fleet_mutation_broadcast_failures=self.mutation_broadcast_failures,
+            fleet_remote_mutations=self.remote_mutations,
         )
         for k, v in self.directory.stats().items():
             s[f"fleet_dir_{k}"] = v

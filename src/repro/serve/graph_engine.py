@@ -56,11 +56,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.graph import CSRGraph, gcn_normalize
 from ..core.plan_cache import (
     PartitionConfig, PartitionPlan, PlanCache, build_partition_plan,
 )
+from ..core.plan_repair import EdgeDelta, delta_chain_hash, repair_plan
 from ..kernels.router import RoutingDecision
 from ..kernels.spmm_batched import bucket_blocks, spmm_batched
 from .scheduler import BatchScheduler, ClassSpec, WorkItem
@@ -110,6 +112,7 @@ class GraphServeEngine:
         max_pending: int = 256,
         feature_bucket: bool = True,
         classes: Optional[Sequence[ClassSpec]] = None,
+        repair_churn_threshold: float = 0.25,
     ):
         self.config = config or PartitionConfig()
         self.cache = cache if cache is not None else PlanCache(cache_capacity)
@@ -127,8 +130,19 @@ class GraphServeEngine:
         # flush composition under concurrent traffic — bucketing keeps the
         # compiled-shape set logarithmic instead of one shape per mix
         self.feature_bucket = feature_bucket
+        # above this fraction of rows dirtied by a delta, incremental plan
+        # repair falls back to a full rebuild (see core.plan_repair)
+        self.repair_churn_threshold = repair_churn_threshold
         self._graphs: Dict[str, CSRGraph] = {}
         self._keys: Dict[str, tuple] = {}  # graph_id -> plan key (hashed once)
+        self._versions: Dict[str, int] = {}  # graph_id -> published version
+        # _bind_lock guards the three maps above as ONE atomic binding:
+        # readers (plan_for, _validate-time lookups) must never observe a
+        # graph from version v+1 paired with the key of version v
+        self._bind_lock = threading.Lock()
+        # serializes mutation application + publish per engine; reads never
+        # take it (they pin a version instead)
+        self._mutate_lock = threading.Lock()
         # one flush absorbs several dispatches' worth of requests so a
         # deadline-triggered flush under load still fills whole batches
         self.scheduler = BatchScheduler(
@@ -156,6 +170,11 @@ class GraphServeEngine:
         self.backend_dispatches: Dict[str, int] = {
             "resident": 0, "windowed": 0, "hbm": 0, "blocked": 0}
         self.last_decision: Optional[RoutingDecision] = None
+        # mutation-path counters (versioned plan lifecycle)
+        self.mutations_applied = 0   # mutate() requests resolved
+        self.mutation_edges = 0      # edge inserts+deletes applied
+        self.plan_repairs = 0        # publishes served by incremental repair
+        self.plan_rebuilds = 0       # publishes that fell back to full build
 
     # ------------------------------------------------------------------ admin
     def register_graph(self, graph_id: str, g: CSRGraph,
@@ -167,9 +186,21 @@ class GraphServeEngine:
         """
         if normalize:
             g = gcn_normalize(g)
-        self._graphs[graph_id] = g
         plan = self.cache.get_or_build(g, self.config)
-        self._keys[graph_id] = plan.key
+        with self._bind_lock:
+            prev_key = self._keys.get(graph_id)
+            prev_ver = self._versions.get(graph_id)
+            if prev_key == plan.key and prev_ver is not None:
+                version = prev_ver          # idempotent re-register
+            elif prev_ver is not None:
+                # content replacement continues the id's version chain so
+                # directory/version invalidation stays monotone
+                version = max(plan.version, prev_ver + 1)
+            else:
+                version = plan.version
+            self._graphs[graph_id] = g
+            self._keys[graph_id] = plan.key
+            self._versions[graph_id] = version
         return plan
 
     def graph_ids(self) -> List[str]:
@@ -179,10 +210,17 @@ class GraphServeEngine:
         """Resolve a registered graph's plan WITHOUT rehashing its arrays —
         the content hash was paid once at registration; a rebuild only
         happens if the plan was LRU-evicted since."""
-        key = self._keys[graph_id]
+        with self._bind_lock:   # key and graph must be the SAME version
+            key = self._keys[graph_id]
+            g = self._graphs[graph_id]
         return self.cache.get_by_key(
             key, lambda: build_partition_plan(
-                self._graphs[graph_id], self.config, graph_hash=key[0]))
+                g, self.config, graph_hash=key[0]))
+
+    def graph_version(self, graph_id: str) -> int:
+        """Current published version of a registered graph's plan chain."""
+        with self._bind_lock:
+            return self._versions[graph_id]
 
     def close(self) -> None:
         """Stop the background scheduler (drains anything still queued)."""
@@ -222,6 +260,31 @@ class GraphServeEngine:
         """
         self._validate(graph_id, x)
         return self.scheduler.submit((graph_id, x), block=block,
+                                     klass=klass, tenant=tenant).future
+
+    def mutate(self, graph_id: str, delta: EdgeDelta, *,
+               block: bool = True, klass: str = "default",
+               tenant: Optional[str] = None) -> Future:
+        """Admit a batched edge delta against a registered graph.
+
+        Returns a ``Future`` resolving to a dict
+        ``{"graph_id", "version", "repaired", "reason", "dirty_rows"}``
+        once the new plan version is PUBLISHED — later submits observe the
+        mutated graph. Mutations ride the same admission queue as reads:
+        a flush dispatches its reads first (against the pre-publish
+        version, which they pin for the duration of the kernel call), then
+        applies that flush's deltas per graph in arrival order and
+        publishes once per graph. In-flight reads are therefore never
+        blocked and never torn — every answer is consistent with either
+        the pre- or post-publish version.
+        """
+        with self._bind_lock:
+            if graph_id not in self._graphs:
+                raise KeyError(f"graph {graph_id!r} not registered "
+                               f"(known: {sorted(self._graphs)})")
+        if not isinstance(delta, EdgeDelta):
+            raise TypeError(f"delta must be an EdgeDelta, got {type(delta)!r}")
+        return self.scheduler.submit((graph_id, delta, "mutate"), block=block,
                                      klass=klass, tenant=tenant).future
 
     def serve_one(self, graph_id: str, x: jax.Array) -> jax.Array:
@@ -290,23 +353,133 @@ class GraphServeEngine:
             wait_s += now - item.t_enqueue
         return answers, wait_s
 
+    @staticmethod
+    def _is_mutation(item: WorkItem) -> bool:
+        """Mutation payloads are ``(graph_id, EdgeDelta, "mutate")`` — the
+        marker is in slot 2 so read payloads (and the multihost engine's
+        ``"pinned-local"`` marker) are never mistaken for deltas."""
+        p = item.payload
+        return len(p) > 2 and p[2] == "mutate"
+
     def _flush(self, items: List[WorkItem]) -> None:
-        """Scheduler flush callback: group by plan, fuse, dispatch in chunks.
+        """Scheduler flush callback: reads first, then mutations.
+
+        Reads dispatch against the flush's pre-publish plan versions;
+        mutations for the same graph coalesce and publish ONCE at the end
+        of the flush, so a mutate never blocks the reads it arrived with.
+        A failing read dispatch still lets this flush's mutations publish
+        (and vice versa a bad delta fails only its own graph's mutation
+        items, never the reads).
+        """
+        reads = [it for it in items if not self._is_mutation(it)]
+        mutations = [it for it in items if self._is_mutation(it)]
+        read_exc: Optional[BaseException] = None
+        if reads:
+            try:
+                self._flush_reads(reads)
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                read_exc = e
+        if mutations:
+            order, groups = self._group_by_graph(mutations)
+            for gid in order:
+                grp = groups[gid]
+                try:
+                    self._apply_mutation(gid, grp)
+                except BaseException as e:  # noqa: BLE001 — isolate per graph
+                    for it in grp:
+                        it.fail(e)
+        if read_exc is not None:
+            raise read_exc
+
+    def _flush_reads(self, items: List[WorkItem]) -> None:
+        """Group reads by plan, fuse, dispatch in chunks.
 
         Runs on the scheduler thread. Requests naming the same graph fuse
         along the feature axis (one slab gather serves all of them);
         distinct graphs chunk into fused dispatches of up to
-        ``max_graphs_per_batch`` in order of first appearance.
+        ``max_graphs_per_batch`` in order of first appearance. Every plan
+        used is version-pinned for the duration of its dispatches: a
+        concurrent publish retires the old version but cannot reclaim it
+        until the last in-flight dispatch unpins.
         """
         order, groups = self._group_by_graph(items)
         plans = {gid: self.plan_for(gid) for gid in order}
+        pinned = [p.key for p in plans.values()]
+        for k in pinned:
+            self.cache.pin_version(k)
+        try:
+            # a raising dispatch aborts the remaining chunks: their items
+            # are failed by the scheduler with the same exception, while
+            # items of already-dispatched chunks keep their results
+            for start in range(0, len(order), self.max_graphs_per_batch):
+                chunk = order[start:start + self.max_graphs_per_batch]
+                self._dispatch(
+                    [(gid, groups[gid], plans[gid]) for gid in chunk])
+        finally:
+            for k in pinned:
+                self.cache.unpin_version(k)
 
-        # a raising dispatch aborts the remaining chunks: their items are
-        # failed by the scheduler with the same exception, while items of
-        # already-dispatched chunks keep their results
-        for start in range(0, len(order), self.max_graphs_per_batch):
-            chunk = order[start:start + self.max_graphs_per_batch]
-            self._dispatch([(gid, groups[gid], plans[gid]) for gid in chunk])
+    # --------------------------------------------------------------- mutation
+    def _apply_mutation(self, gid: str, grp: List[WorkItem]) -> None:
+        """Apply one flush's coalesced deltas for ``gid`` and publish once.
+
+        Deltas apply SEQUENTIALLY in arrival order (never merged: a delete
+        in delta k must see the graph as delta k-1 left it), the plan is
+        repaired once against the combined touched-row set, and the new
+        version publishes atomically — the old version is retired and
+        reclaimed when its last pinned reader drains.
+        """
+        with self._mutate_lock:
+            with self._bind_lock:
+                g_old = self._graphs[gid]
+                old_key = self._keys[gid]
+                cur_ver = self._versions[gid]
+            plan_old = self.plan_for(gid)
+            g_new = g_old
+            touched: List[np.ndarray] = []
+            n_edges = 0
+            gh = plan_old.graph_hash
+            for it in grp:
+                delta: EdgeDelta = it.payload[1]
+                g_new = delta.apply(g_new)
+                touched.append(delta.touched_rows())
+                n_edges += delta.size
+                gh = delta_chain_hash(gh, delta)
+            pv = repair_plan(
+                plan_old, g_old, g_new,
+                np.unique(np.concatenate(touched)) if touched
+                else np.empty(0, np.int64),
+                churn_threshold=self.repair_churn_threshold,
+                graph_hash=gh)
+            # the engine owns the id's version CHAIN; the repair stamp is
+            # relative to the plan object, which may have been rebuilt (at
+            # version 0) after an eviction
+            pv.version = cur_ver + 1
+            pv.plan.version = cur_ver + 1
+            self._publish_version(gid, g_new, pv.plan, old_key)
+            with self._counters_lock:
+                self.mutations_applied += len(grp)
+                self.mutation_edges += n_edges
+                if pv.repaired:
+                    self.plan_repairs += 1
+                else:
+                    self.plan_rebuilds += 1
+        result = {"graph_id": gid, "version": pv.version,
+                  "repaired": pv.repaired, "reason": pv.reason,
+                  "dirty_rows": pv.dirty_rows}
+        for it in grp:
+            it.complete(dict(result))
+
+    def _publish_version(self, gid: str, g_new: CSRGraph,
+                         plan: PartitionPlan, old_key: tuple) -> None:
+        """Publish hook: cache publish first (so plan_for never misses),
+        THEN atomically re-bind the id. Subclasses extend this to also
+        record the version in the placement directory / notify peers."""
+        self.cache.publish(plan, retire_key=old_key)
+        with self._bind_lock:
+            self._graphs[gid] = g_new
+            self._keys[gid] = plan.key
+            self._versions[gid] = plan.version
 
     def _dispatch(self, batch: List[Tuple[str, List[WorkItem],
                                           PartitionPlan]]) -> None:
@@ -423,6 +596,11 @@ class GraphServeEngine:
             avg_request_latency_s=(
                 self.total_request_latency_s / self.requests_served
                 if self.requests_served else 0.0),
+            # versioned plan lifecycle: streaming mutations
+            mutations_applied=self.mutations_applied,
+            mutation_edges=self.mutation_edges,
+            plan_repairs=self.plan_repairs,
+            plan_rebuilds=self.plan_rebuilds,
         )
         return s
 
