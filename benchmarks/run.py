@@ -25,6 +25,10 @@ Emits ``name,us_per_call,derived`` CSV. Sections:
             multi-process jax) routed by the placement directory —
             forwarded traffic + the collective global-mesh giant (merges
             a "multihost" key into benchmarks/results/serve_stats.json)
+  tune      online partition autotuner: offline candidate ranking, the
+            live shadow-measured promotion loop (steady-state tuned vs
+            default dispatch), and the shadow p99-overhead check (merges
+            a "tuning" key into benchmarks/results/serve_stats.json)
   moe       beyond-paper: block dispatch for MoE
   roofline  summary rows from the dry-run results (if present)
 """
@@ -68,14 +72,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6,table2,preproc,repair,"
-                         "serve,routing,fleet,multihost,moe,roofline")
+                         "serve,routing,fleet,multihost,tune,moe,roofline")
     ap.add_argument("--budget-edges", type=int, default=200_000)
     args = ap.parse_args()
     # multihost spawns its own 2-process fleet, so it is opt-in (not part
     # of the default sweep: nightly CI runs it explicitly)
     want = set(args.only.split(",")) if args.only else \
         {"fig5", "fig6", "table2", "preproc", "repair", "serve", "routing",
-         "fleet", "moe", "roofline"}
+         "fleet", "tune", "moe", "roofline"}
 
     print("name,us_per_call,derived")
     if "fig5" in want:
@@ -113,6 +117,10 @@ def main() -> None:
     if "multihost" in want:
         from .multihost_serve import run as multihost
         for r in multihost(budget_edges=args.budget_edges):
+            print(r)
+    if "tune" in want:
+        from .tune_partition import run as tune
+        for r in tune(budget_edges=args.budget_edges):
             print(r)
     if "moe" in want:
         from .moe_dispatch import run as moe

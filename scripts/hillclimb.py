@@ -1,11 +1,18 @@
-"""§Perf hillclimbing harness: measure one (cell × variant) and append the
-probe-extrapolated roofline vector to benchmarks/results/hillclimb.json.
+"""Perf hillclimbing harness for the LM ROOFLINE variants only.
+
+Measures one (cell x variant) of the legacy language-model program and
+appends the probe-extrapolated roofline vector to
+``benchmarks/results/hillclimb.json``:
 
     PYTHONPATH=src python scripts/hillclimb.py --arch dbrx-132b \
         --shape train_4k --variant bf16_attn
 
-Variants are named flag bundles (hypothesis -> change); before/after deltas
-go into EXPERIMENTS.md §Perf.
+``VARIANTS`` below are named LM flag bundles (attention precision, MoE
+dispatch, sharding levers) — they do NOT cover the graph-serving stack.
+Partition/SpMM tuning moved to its own tools: ``scripts/tune_partition.py``
+for offline one-shot tuning of a saved graph, and
+:class:`repro.tuning.PlanTuner` for the online shadow-measured autotuner
+inside the serving engines (see ``src/repro/tuning/``).
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"

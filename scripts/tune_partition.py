@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Offline one-shot partition tuning for a saved graph.
+
+Thin CLI over :func:`repro.tuning.tune_offline`: builds the incumbent
+partition plan plus every candidate config (warp_nzs tables, slab
+capacity, row-packing cap — see ``repro/tuning/search.py``), times one
+batched SpMM dispatch per candidate (1 warmup + best-of-N), and prints
+the ranking as JSON. The best candidate's config is exactly what you'd
+pass as ``PartitionConfig(**...)`` when registering the graph — or let
+the online tuner (``GraphServeEngine(tuner=PlanTuner())``) find it from
+live traffic with shadow measurements.
+
+Graph input: an .npz with ``rowptr``/``colidx``/``values`` (and optional
+``n_cols``), or ``--synthetic N,M,SEED`` for a power-law demo graph.
+
+    PYTHONPATH=src python scripts/tune_partition.py --graph g.npz
+    PYTHONPATH=src python scripts/tune_partition.py --synthetic 20000,100000,0
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def load_graph(args):
+    import numpy as np
+
+    from repro.core.graph import CSRGraph
+
+    if args.graph:
+        with np.load(args.graph) as z:
+            rowptr = z["rowptr"]
+            colidx = z["colidx"]
+            values = (z["values"] if "values" in z
+                      else np.ones(len(colidx), dtype=np.float32))
+            n_cols = (int(z["n_cols"]) if "n_cols" in z
+                      else int(colidx.max()) + 1 if len(colidx) else 0)
+        return CSRGraph(rowptr=rowptr, colidx=colidx,
+                        values=np.asarray(values, np.float32),
+                        n_cols=n_cols)
+    n, m, seed = (int(v) for v in args.synthetic.split(","))
+    from repro.data.graphs import make_power_law_graph
+    return make_power_law_graph(n, m, seed=seed)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--graph", help=".npz with rowptr/colidx[/values/n_cols]")
+    src.add_argument("--synthetic", metavar="N,M,SEED",
+                     help="power-law graph: nodes,edges,seed")
+    ap.add_argument("--feat-dim", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed runs per candidate (best is kept)")
+    ap.add_argument("--backend", default="blocked",
+                    help="measurement backend (auto|pallas|windowed|hbm|"
+                         "blocked); per-candidate overrides still apply")
+    ap.add_argument("--mode", default="tpu", choices=["tpu", "paper"])
+    ap.add_argument("--max-block-warps", type=int, default=64)
+    ap.add_argument("--max-warp-nzs", type=int, default=4)
+    ap.add_argument("--out", help="also write the JSON report here")
+    args = ap.parse_args(argv)
+
+    from repro.core.plan_cache import PartitionConfig
+    from repro.tuning import tune_offline
+
+    g = load_graph(args)
+    base = PartitionConfig(mode=args.mode,
+                           max_block_warps=args.max_block_warps,
+                           max_warp_nzs=args.max_warp_nzs)
+    report = tune_offline(g, base, feat_dim=args.feat_dim,
+                          repeats=args.repeats, backend=args.backend)
+    report["graph"] = {"n_rows": g.n_rows, "n_cols": g.n_cols, "nnz": g.nnz}
+    text = json.dumps(report, indent=2, default=str)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    best = report["best"]
+    if best is not None:
+        print(f"\nbest: {best['label']} "
+              f"({best['speedup_vs_base']:.2f}x vs base)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,12 +24,20 @@ Pattern modes:
 Both modes share the same metadata format and the same Algorithm-2 emission
 loop, so every downstream consumer (jnp backend, Pallas kernel, benchmarks)
 is mode-agnostic.
+
+Either mode accepts an explicit per-degree ``warp_nzs_override`` vector (the
+upstream kernel's "v1..v5 workload" knob): entry ``d`` caps how many
+non-zeros one workload unit takes for rows of degree ``d``.  Overrides are
+validated against Algorithm 1's admissibility guard — some factor ``f`` of
+``max_block_warps`` must satisfy ``f * warp_nzs[d] >= d``, which reduces to
+``max_block_warps * warp_nzs[d] >= d`` — so every admissible override still
+covers each row with one block and the kernels stay oblivious.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,6 +48,7 @@ __all__ = [
     "BlockPartition",
     "WarpPartition",
     "get_partition_patterns",
+    "validate_warp_nzs_override",
     "block_level_partition",
     "warp_level_partition",
     "pack_slabs",
@@ -78,11 +87,53 @@ def _factors(n: int) -> List[int]:
     return [f for f in range(1, n + 1) if n % f == 0]
 
 
+def validate_warp_nzs_override(
+    max_block_warps: int,
+    max_warp_nzs: int,
+    warp_nzs_override: Sequence[int],
+) -> np.ndarray:
+    """Validate a per-degree warp_nzs vector against Algorithm 1's guard.
+
+    Accepts a vector of length ``deg_bound`` (entries for degrees 1 ..
+    deg_bound) or ``deg_bound + 1`` (index 0 ignored). Every entry must be
+    an integer with ``1 <= warp_nzs[d] <= max_warp_nzs`` and satisfy the
+    admissibility guard ``max_block_warps * warp_nzs[d] >= d`` (i.e. SOME
+    factor ``f`` of ``max_block_warps`` has ``f * warp_nzs[d] >= d``, so
+    degree ``d`` still fits one block).  Returns the normalized int64 table
+    indexed 0 .. deg_bound; raises ``ValueError`` otherwise.
+    """
+    deg_bound = max_block_warps * max_warp_nzs
+    arr = np.asarray(warp_nzs_override)
+    if arr.ndim != 1 or len(arr) not in (deg_bound, deg_bound + 1):
+        raise ValueError(
+            f"warp_nzs override must be a 1-D vector of length {deg_bound} "
+            f"(degrees 1..deg_bound) or {deg_bound + 1} (index 0 ignored); "
+            f"got shape {arr.shape}")
+    if not np.issubdtype(arr.dtype, np.integer):
+        if not np.all(np.isfinite(arr)) or np.any(arr != np.floor(arr)):
+            raise ValueError("warp_nzs override entries must be integers")
+    arr = arr.astype(np.int64)
+    if len(arr) == deg_bound:
+        arr = np.concatenate(([0], arr))
+    d = np.arange(1, deg_bound + 1, dtype=np.int64)
+    wnz = arr[1:]
+    bad = (wnz < 1) | (wnz > max_warp_nzs) | (max_block_warps * wnz < d)
+    if bad.any():
+        offenders = d[bad][:8].tolist()
+        raise ValueError(
+            f"inadmissible warp_nzs override at degrees {offenders}"
+            f"{'...' if int(bad.sum()) > 8 else ''}: need 1 <= warp_nzs[d] "
+            f"<= max_warp_nzs={max_warp_nzs} and max_block_warps * "
+            f"warp_nzs[d] >= d (max_block_warps={max_block_warps})")
+    return arr
+
+
 def get_partition_patterns(
     max_block_warps: int,
     max_warp_nzs: int,
     mode: str = "paper",
     max_rows_per_block: int | None = None,
+    warp_nzs_override: Optional[Sequence[int]] = None,
 ) -> PartitionPatterns:
     """Algorithm 1: build the degree -> (block_rows, warp_nzs) table.
 
@@ -90,32 +141,57 @@ def get_partition_patterns(
     max_warp_nzs >= d`` holds at ``d == deg_bound`` with ``f =
     max_block_warps``, so the boundary degree is one ordinary pattern block
     (block_rows=1, warp_nzs=max_warp_nzs), not a split row.
+
+    ``warp_nzs_override`` (validated by :func:`validate_warp_nzs_override`)
+    replaces the derived per-degree warp_nzs cap: in paper mode, degree ``d``
+    takes the smallest factor ``f`` with ``f * warp_nzs_override[d] >= d``
+    (the default table is exactly ``warp_nzs_override[d] == max_warp_nzs``
+    everywhere); in tpu mode the per-block non-zero budget becomes
+    ``warp_nzs_override[d] * max_block_warps`` instead of the full slab.
+    Lower entries trade slab density for more, smaller blocks.
     """
     deg_bound = max_block_warps * max_warp_nzs
     block_rows = np.zeros(deg_bound + 1, dtype=np.int32)
     warp_nzs = np.zeros(deg_bound + 1, dtype=np.int32)
     factor = np.zeros(deg_bound + 1, dtype=np.int32)
+    override = None
+    if warp_nzs_override is not None:
+        override = validate_warp_nzs_override(
+            max_block_warps, max_warp_nzs, warp_nzs_override)
 
     if mode == "paper":
         factors = _factors(max_block_warps)
-        i = 0
-        deg = 1
-        # Verbatim transcription of Algorithm 1 (inclusive upper bound: the
-        # guard admits deg_bound itself via the largest factor).
-        while deg <= deg_bound:
-            if factors[i] * max_warp_nzs >= deg:
-                block_rows[deg] = max_block_warps // factors[i]
-                warp_nzs[deg] = math.ceil(deg / factors[i])
-                factor[deg] = factors[i]
-                deg += 1
-            else:
-                i += 1
+        if override is None:
+            i = 0
+            deg = 1
+            # Verbatim transcription of Algorithm 1 (inclusive upper bound:
+            # the guard admits deg_bound itself via the largest factor).
+            while deg <= deg_bound:
+                if factors[i] * max_warp_nzs >= deg:
+                    block_rows[deg] = max_block_warps // factors[i]
+                    warp_nzs[deg] = math.ceil(deg / factors[i])
+                    factor[deg] = factors[i]
+                    deg += 1
+                else:
+                    i += 1
+        else:
+            # Same guard with the per-degree cap; admissibility guarantees
+            # the largest factor always qualifies, so the scan terminates.
+            for deg in range(1, deg_bound + 1):
+                f = next(fc for fc in factors
+                         if fc * int(override[deg]) >= deg)
+                block_rows[deg] = max_block_warps // f
+                warp_nzs[deg] = math.ceil(deg / f)
+                factor[deg] = f
     elif mode == "tpu":
         # Dense VMEM-slab packing: as many rows as fit the slab, capped so
-        # the one-hot segment matmul operand stays MXU-sized.
+        # the one-hot segment matmul operand stays MXU-sized.  An override
+        # shrinks the per-block non-zero budget below the full slab.
         cap = max_rows_per_block or max_block_warps
         for deg in range(1, deg_bound + 1):
-            br = max(1, min(cap, deg_bound // deg))
+            budget = (deg_bound if override is None
+                      else int(override[deg]) * max_block_warps)
+            br = max(1, min(cap, budget // deg))
             block_rows[deg] = br
             warp_nzs[deg] = deg  # one unit per row on TPU
             factor[deg] = 1

@@ -51,7 +51,8 @@ import dataclasses
 import logging
 import threading
 import time
-from concurrent.futures import Future
+from collections import OrderedDict, deque
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -60,11 +61,14 @@ import numpy as np
 
 from ..core.graph import CSRGraph, gcn_normalize
 from ..core.plan_cache import (
-    PartitionConfig, PartitionPlan, PlanCache, build_partition_plan,
+    PartitionConfig, PartitionPlan, PlanCache, _config_tag,
+    build_partition_plan, graph_content_hash,
 )
 from ..core.plan_repair import EdgeDelta, delta_chain_hash, repair_plan
 from ..kernels.router import RoutingDecision
 from ..kernels.spmm_batched import bucket_blocks, spmm_batched
+from ..tuning.tuner import PlanTuner
+from ..tuning.search import TuningCandidate
 from .scheduler import BatchScheduler, ClassSpec, WorkItem
 
 __all__ = ["GraphRequest", "GraphServeEngine"]
@@ -72,6 +76,12 @@ __all__ = ["GraphRequest", "GraphServeEngine"]
 logger = logging.getLogger(__name__)
 
 _BACKENDS = ("auto", "pallas", "windowed", "hbm", "blocked")
+
+# per-plan dispatch timing ring: last N wall times per plan key, bounded
+# to the most recently dispatched keys so a graph-churn workload can't
+# grow the map without bound
+PLAN_TIMING_RING = 64
+PLAN_TIMING_KEYS = 256
 
 
 @dataclasses.dataclass
@@ -113,6 +123,7 @@ class GraphServeEngine:
         feature_bucket: bool = True,
         classes: Optional[Sequence[ClassSpec]] = None,
         repair_churn_threshold: float = 0.25,
+        tuner: Optional[PlanTuner] = None,
     ):
         self.config = config or PartitionConfig()
         self.cache = cache if cache is not None else PlanCache(cache_capacity)
@@ -175,6 +186,32 @@ class GraphServeEngine:
         self.mutation_edges = 0      # edge inserts+deletes applied
         self.plan_repairs = 0        # publishes served by incremental repair
         self.plan_rebuilds = 0       # publishes that fell back to full build
+        # per-plan dispatch wall times: key -> deque of (seconds, exact)
+        # where exact=True means the dispatch held ONLY this plan (a fused
+        # multi-graph dispatch records its per-plan SHARE, flagged inexact).
+        # Appended under _counters_lock on the dispatch path; stats() and
+        # the tuner's incumbent estimate read it there too.
+        self._plan_times: "OrderedDict[tuple, deque]" = OrderedDict()
+        # --- online partition autotuning (shadow-measured rollout) -------
+        # The tuner only ever acts on COPIES of live work: a shadow
+        # duplicates one dispatch onto the candidate plan on a separate
+        # single worker thread AFTER the live futures resolved, so the
+        # serving path never waits on a candidate (reads never pay for
+        # candidates). At most one shadow is in flight per engine; when
+        # the worker is busy the opportunity is skipped, never queued.
+        self.tuner = tuner
+        self._shadow_pool: Optional[ThreadPoolExecutor] = None
+        self._shadow_lock = threading.Lock()
+        self._shadow_inflight = False
+        # tuned dispatch hints by graph id, re-attached to plans rebuilt
+        # from scratch after an eviction (the structure comes back via the
+        # config in the key; the backend/grid_order hints live here)
+        self._tuned_hints: Dict[str, Dict] = {}
+        self.shadow_dispatches = 0   # candidate measurements completed
+        self.shadow_skipped = 0      # opportunities dropped (worker busy)
+        self.shadow_failures = 0     # candidate build/dispatch raised
+        self.shadow_time_s = 0.0     # wall time spent in shadow dispatches
+        self.tuned_promotions = 0    # tuned configs published
 
     # ------------------------------------------------------------------ admin
     def register_graph(self, graph_id: str, g: CSRGraph,
@@ -182,11 +219,22 @@ class GraphServeEngine:
         """Register (and warm the plan for) a graph under ``graph_id``.
 
         Re-registering the same id with identical content is a no-op (cache
-        hit); different content replaces the binding.
+        hit); different content replaces the binding. A same-content
+        re-register keeps a TUNED binding (the autotuner may have promoted
+        a non-default config for this graph — identical content must not
+        silently reset it to ``self.config``).
         """
         if normalize:
             g = gcn_normalize(g)
-        plan = self.cache.get_or_build(g, self.config)
+        h = graph_content_hash(g)
+        with self._bind_lock:
+            prev_key = self._keys.get(graph_id)
+        if prev_key is not None and prev_key[0] == h and \
+                prev_key != (h, self.config):
+            return self.plan_for(graph_id)  # tuned binding, same content
+        key = (h, self.config)
+        plan = self.cache.get_by_key(
+            key, lambda: build_partition_plan(g, self.config, graph_hash=h))
         with self._bind_lock:
             prev_key = self._keys.get(graph_id)
             prev_ver = self._versions.get(graph_id)
@@ -209,13 +257,22 @@ class GraphServeEngine:
     def plan_for(self, graph_id: str) -> PartitionPlan:
         """Resolve a registered graph's plan WITHOUT rehashing its arrays —
         the content hash was paid once at registration; a rebuild only
-        happens if the plan was LRU-evicted since."""
+        happens if the plan was LRU-evicted since. The rebuild uses the
+        config EMBEDDED IN THE KEY (not ``self.config``): after the tuner
+        promotes a non-default config, an evicted plan must rebuild with
+        its tuned structure. Tuned dispatch hints are re-attached from the
+        engine's hint map when the rebuild lost them."""
         with self._bind_lock:   # key and graph must be the SAME version
             key = self._keys[graph_id]
             g = self._graphs[graph_id]
-        return self.cache.get_by_key(
+        plan = self.cache.get_by_key(
             key, lambda: build_partition_plan(
-                g, self.config, graph_hash=key[0]))
+                g, key[1], graph_hash=key[0]))
+        if plan.tuned is None:
+            hints = self._tuned_hints.get(graph_id)
+            if hints is not None and plan.key[1] == hints["config"]:
+                plan.tuned = hints["tuned"]
+        return plan
 
     def graph_version(self, graph_id: str) -> int:
         """Current published version of a registered graph's plan chain."""
@@ -225,6 +282,10 @@ class GraphServeEngine:
     def close(self) -> None:
         """Stop the background scheduler (drains anything still queued)."""
         self.scheduler.stop()
+        with self._shadow_lock:
+            pool, self._shadow_pool = self._shadow_pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     # ------------------------------------------------------------------ serve
     def _validate(self, graph_id: str, x) -> None:
@@ -506,19 +567,25 @@ class GraphServeEngine:
         pad_to = None
         if self.block_bucket:
             pad_to = bucket_blocks(b_total, self.block_bucket)
+        backend, grid_order = self._effective_launch(plans)
         outs, decision = spmm_batched(
             [p.slabs for p in plans], xs, [p.n_rows for p in plans],
-            backend=self.backend, interpret=self.interpret,
-            pad_blocks_to=pad_to, return_decision=True)
+            backend=backend, interpret=self.interpret,
+            pad_blocks_to=pad_to, return_decision=True,
+            grid_order=grid_order)
         jax.block_until_ready(outs)
         dt = time.perf_counter() - t0         # this dispatch's kernel time
 
         executed = decision.backend if decision is not None else "blocked"
+        share = dt / len(batch)
         with self._counters_lock:
             self.backend_dispatches[executed] += 1
             self.last_decision = decision
             self.live_blocks += b_total
             self.padded_blocks += pad_to if pad_to else b_total
+            for _, _, plan in batch:
+                self._record_plan_time_locked(plan.key, share,
+                                              len(batch) == 1)
         if logger.isEnabledFor(logging.DEBUG):
             logger.debug(
                 "dispatch: graphs=%d blocks=%d->%d backend=%s (%s) %.1fms",
@@ -552,12 +619,210 @@ class GraphServeEngine:
             self.total_serve_s += dt
         for item, result in answers:
             item.complete(result)
+        # autotuning LAST: every live answer above already resolved, so
+        # shadow work can never sit between a request and its result
+        if self.tuner is not None:
+            self._tuner_tick(batch, xs, dt)
+
+    # ------------------------------------------------------------ autotuning
+    def _effective_launch(self, plans: List[PartitionPlan]
+                          ) -> Tuple[str, str]:
+        """Backend/grid_order for one fused dispatch: a plan's tuned hints
+        apply when every plan in the batch agrees on the effective pair
+        (trivially true for the single-graph dispatches that dominate hot
+        traffic); a mixed batch falls back to the engine defaults."""
+        pairs = {(((p.tuned or {}).get("backend")) or self.backend,
+                  ((p.tuned or {}).get("grid_order")) or "block_major")
+                 for p in plans}
+        if len(pairs) == 1:
+            return pairs.pop()
+        return self.backend, "block_major"
+
+    def _record_plan_time_locked(self, key: tuple, seconds: float,
+                                 exact: bool) -> None:
+        ring = self._plan_times.get(key)
+        if ring is None:
+            ring = self._plan_times[key] = deque(maxlen=PLAN_TIMING_RING)
+            while len(self._plan_times) > PLAN_TIMING_KEYS:
+                self._plan_times.popitem(last=False)
+        else:
+            self._plan_times.move_to_end(key)
+        ring.append((seconds, exact))
+
+    def _tuner_tick(self, batch, xs, dt: float) -> None:
+        """Per-dispatch tuner hook (runs AFTER the live futures resolved).
+
+        Feeds the rate tracker, asks the tuner whether any graph in this
+        batch is due a shadow measurement, and hands at most one shadow to
+        the single worker thread. Multihost engines skip shadowing —
+        promotion would re-key the plan under the directory's feet; only
+        single-host engines tune (the multihost follow-on needs a version
+        broadcast like mutate()'s).
+        """
+        for gid, grp, _ in batch:
+            self.tuner.observe(gid, len(grp))
+        if getattr(self, "directory", None) is not None:
+            return      # multihost: directory-owned keys don't tune yet
+        for (gid, grp, plan), x in zip(batch, xs):
+            cand = self.tuner.next_shadow(gid, plan.config)
+            if cand is None:
+                continue
+            self._submit_shadow(gid, plan, cand, x)
+
+    def _submit_shadow(self, gid: str, plan_i: PartitionPlan,
+                       cand: TuningCandidate, x: jax.Array) -> None:
+        """Hand one shadow measurement to the worker; skip if it's busy
+        (shadows are opportunistic — never queued, never blocking)."""
+        with self._shadow_lock:
+            if self._shadow_inflight:
+                busy = True
+            else:
+                busy = False
+                self._shadow_inflight = True
+                if self._shadow_pool is None:
+                    self._shadow_pool = ThreadPoolExecutor(
+                        max_workers=1, thread_name_prefix="plan-shadow")
+                pool = self._shadow_pool
+        if busy:
+            with self._counters_lock:
+                self.shadow_skipped += 1
+            return
+        pool.submit(self._run_shadow, gid, plan_i, cand, x)
+
+    def _run_shadow(self, gid: str, plan_i: PartitionPlan,
+                    cand: TuningCandidate, x: jax.Array) -> None:
+        """Worker-thread body: build the candidate plan (single-flight via
+        the cache) and run a PAIRED A/B measurement — the incumbent and
+        candidate plans dispatch the SAME features back-to-back in this
+        thread (1 untimed candidate warmup to absorb compilation, then
+        timed runs in ABBA order with the per-side min scored). Pairing is
+        what makes the comparison robust: both sides see the same
+        background load, so scheduler/GIL contention cancels instead of
+        poisoning the candidate's numbers. A promotion signal publishes
+        the candidate through the version chain."""
+        t_start = time.perf_counter()
+        old_key = plan_i.key
+        try:
+            with self._bind_lock:
+                stale = self._keys.get(gid) != old_key
+                g = self._graphs.get(gid)
+            if stale or g is None:
+                return              # graph mutated/replaced since the tick
+            key = (old_key[0], cand.config)
+            plan_c = self.cache.get_by_key(
+                key, lambda: build_partition_plan(
+                    g, cand.config, graph_hash=old_key[0]))
+            hints_i = plan_i.tuned or {}
+            launches = {
+                "inc": (plan_i, hints_i.get("backend") or self.backend,
+                        hints_i.get("grid_order") or "block_major"),
+                "cand": (plan_c, cand.backend or self.backend,
+                         cand.grid_order),
+            }
+
+            def _once(which: str) -> float:
+                plan, backend, grid_order = launches[which]
+                pad_to = (bucket_blocks(plan.num_blocks, self.block_bucket)
+                          if self.block_bucket else None)
+                t0 = time.perf_counter()
+                jax.block_until_ready(spmm_batched(
+                    [plan.slabs], [x], [plan.n_rows],
+                    backend=backend, interpret=self.interpret,
+                    pad_blocks_to=pad_to, grid_order=grid_order))
+                return time.perf_counter() - t0
+
+            _once("cand")           # warmup: compilation must not score
+            # ABBA order de-phases background load: a live dispatch that
+            # overlaps the shadow window hits early and late slots alike,
+            # so neither side's min is systematically the contended one
+            # (short candidate runs otherwise phase-lock into the busy
+            # slots while long incumbent runs land in the idle gaps).
+            samples = [(w, _once(w)) for w in ("inc", "cand", "cand", "inc")]
+            incumbent_s = min(s for w, s in samples if w == "inc")
+            candidate_s = min(s for w, s in samples if w == "cand")
+            with self._counters_lock:
+                self.shadow_dispatches += 1
+            winner = self.tuner.record_shadow(gid, cand, incumbent_s,
+                                              candidate_s)
+            if winner is not None:
+                self._promote_tuned(gid, old_key, winner, plan_c)
+        except Exception:  # noqa: BLE001 — a broken candidate must not
+            logger.exception("shadow measurement failed for %r (%s)",
+                             gid, cand.label)        # take down the worker
+            with self._counters_lock:
+                self.shadow_failures += 1
+            self.tuner.candidate_failed(gid, cand)
+        finally:
+            with self._counters_lock:
+                self.shadow_time_s += time.perf_counter() - t_start
+            with self._shadow_lock:
+                self._shadow_inflight = False
+
+    def _promote_tuned(self, gid: str, old_key: tuple,
+                       cand: TuningCandidate, plan_c: PartitionPlan) -> None:
+        """Publish a winning candidate as the graph's next plan version.
+
+        Rides the same machinery as mutate(): under the mutation lock the
+        binding is re-checked (a racing mutation aborts the promotion —
+        the tuner forgets the graph and re-tunes if it stays hot), the
+        plan gets its tuned hints + the next chain version, and
+        ``_publish_version`` atomically publishes + re-binds. In-flight
+        reads keep their pinned incumbent version until they drain.
+        """
+        with self._mutate_lock:
+            with self._bind_lock:
+                if self._keys.get(gid) != old_key:
+                    aborted = True
+                else:
+                    aborted = False
+                    cur_ver = self._versions[gid]
+                    g = self._graphs[gid]
+            if aborted:
+                self.tuner.reset(gid)
+                return
+            plan_c.tuned = cand.tuned_hints()
+            plan_c.version = cur_ver + 1
+            self._publish_version(gid, g, plan_c, old_key)
+            self._tuned_hints[gid] = {"config": cand.config,
+                                      "tuned": dict(plan_c.tuned)}
+            with self._counters_lock:
+                self.tuned_promotions += 1
+        self.tuner.confirm_promoted(gid)
+        logger.info("promoted tuned config for %r: %s (version %d)",
+                    gid, cand.label, plan_c.version)
+
+    def plan_timings(self) -> Dict[str, Dict[str, float]]:
+        """Per-plan dispatch timing summary from the bounded ring buffers.
+
+        Keyed ``<graph_hash[:12]>:<config_tag[:8]>`` (hash alone is
+        ambiguous once the tuner publishes a re-configured plan of the
+        same content). ``exact_n`` counts single-graph samples — fused
+        multi-graph dispatches contribute their per-plan share only.
+        """
+        with self._counters_lock:
+            snap = {k: list(ring) for k, ring in self._plan_times.items()}
+        out: Dict[str, Dict[str, float]] = {}
+        for key, samples in snap.items():
+            times = [s for s, _ in samples]
+            tag = f"{key[0][:12]}:{_config_tag(key[1])[:8]}"
+            out[tag] = {
+                "n": len(times),
+                "exact_n": sum(1 for _, e in samples if e),
+                "last_s": times[-1],
+                "mean_s": float(np.mean(times)),
+                "p50_s": float(np.median(times)),
+            }
+        return out
 
     # ------------------------------------------------------------------ stats
     def stats(self) -> Dict[str, float]:
         s = {f"cache_{k}": v for k, v in self.cache.stats().items()}
         s.update({f"sched_{k}": v
                   for k, v in self.scheduler.stats().items()})
+        if self.tuner is not None:
+            s.update({f"tuner_{k}": v
+                      for k, v in self.tuner.stats().items()})
+        s["plan_timings"] = self.plan_timings()
         # engine counters are one atomic snapshot (same guarantee as
         # PlanCache.stats()); cache/scheduler snapshots above are each
         # internally consistent but taken a moment earlier
@@ -601,6 +866,13 @@ class GraphServeEngine:
             mutation_edges=self.mutation_edges,
             plan_repairs=self.plan_repairs,
             plan_rebuilds=self.plan_rebuilds,
+            # online autotuning: shadow measurements + promotions
+            shadow_dispatches=self.shadow_dispatches,
+            shadow_skipped=self.shadow_skipped,
+            shadow_failures=self.shadow_failures,
+            shadow_time_s=self.shadow_time_s,
+            tuned_promotions=self.tuned_promotions,
+            tuned_graphs=len(self._tuned_hints),
         )
         return s
 

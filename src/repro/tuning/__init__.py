@@ -1,0 +1,38 @@
+"""Online partition autotuning (AWB-GCN-style runtime rebalancing).
+
+The partition pattern table is a hand-tuned constant — the upstream
+Accel-GCN kernel carries five commented-out ``warp_nz`` "workload" vectors,
+and AWB-GCN showed runtime rebalancing beats any static configuration
+across graphs.  This package closes the loop for the serving stack:
+
+* :mod:`repro.tuning.search` — the candidate space: per-degree
+  ``warp_nzs`` override tables, slab capacity (``max_warp_nzs`` /
+  ``deg_bound``), row-packing caps, grid order and backend — each an
+  admissible :class:`~repro.core.plan_cache.PartitionConfig` variant.
+* :mod:`repro.tuning.tuner` — :class:`PlanTuner`, the online policy: an
+  EWMA request-rate tracker decides which graphs are hot enough to be
+  worth tuning, a fraction of their live dispatches is SHADOWED onto a
+  candidate plan off the critical path (the answer always comes from the
+  incumbent — reads never pay for candidates), and a candidate that wins
+  K consecutive comparisons by at least X% is promoted through the plan
+  cache's versioned ``publish``/``retire`` chain.  ``tune_offline`` is the
+  same measurement loop as a one-shot CLI-friendly function.
+
+Tuned configs live in the :class:`~repro.core.plan_cache.PartitionPlan`
+(``plan.tuned`` + the config inside ``plan.key``) and survive disk
+spill/reload, so a graph learned once stays fast forever.
+"""
+from .search import (  # noqa: F401
+    TuningCandidate,
+    default_candidates,
+    staircase_warp_nzs,
+)
+from .tuner import PlanTuner, tune_offline  # noqa: F401
+
+__all__ = [
+    "TuningCandidate",
+    "default_candidates",
+    "staircase_warp_nzs",
+    "PlanTuner",
+    "tune_offline",
+]

@@ -6,7 +6,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core.graph import csr_from_edges, degree_sort_csr
 from repro.core.partition import (
     balance_stats, block_level_partition, get_partition_patterns,
-    metadata_bytes, pack_slabs, warp_level_partition,
+    metadata_bytes, pack_slabs, validate_warp_nzs_override,
+    warp_level_partition,
 )
 
 from conftest import make_powerlaw_csr
@@ -177,3 +178,96 @@ def test_pack_slabs_every_nz_exactly_once():
     nnzs = bp.nnz_blk
     for b in range(min(bp.num_blocks, 50)):
         assert np.all(slabs["values"][b, nnzs[b]:] == 0)
+
+
+# ---------------------------------------------------------------------------
+# warp_nzs overrides (the autotuner's candidate axis): any ADMISSIBLE
+# table yields bit-identical SpMM output on both kernel backends, and
+# inadmissible tables are rejected up front
+# ---------------------------------------------------------------------------
+def _int_graph(n, seed):
+    """Small-integer-valued graph: SpMM sums are exactly representable in
+    float32, so different block partitions must agree BIT-identically."""
+    rng = np.random.default_rng(seed)
+    deg = np.minimum(rng.zipf(1.6, n), 200)
+    src = np.repeat(np.arange(n), deg)
+    dst = rng.integers(0, n, len(src))
+    vals = rng.integers(1, 4, len(src)).astype(np.float32)
+    return degree_sort_csr(csr_from_edges(src, dst, n, values=vals))
+
+
+def _random_admissible_override(mbw, mwn, seed):
+    rng = np.random.default_rng(seed)
+    lo = np.maximum(1, -(-np.arange(1, mbw * mwn + 1) // mbw))  # ceil(d/mbw)
+    return rng.integers(lo, mwn + 1)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(30, 250), seed=st.integers(0, 10_000),
+       mode=st.sampled_from(["paper", "tpu"]),
+       dims=st.sampled_from([(4, 4), (8, 2), (4, 8)]))
+def test_admissible_override_bit_identical_on_both_backends(n, seed, mode,
+                                                            dims):
+    import jax.numpy as jnp
+    from repro.kernels.ops import spmm_blocked, spmm_pallas
+
+    mbw, mwn = dims
+    g = _int_graph(n, seed)
+    override = _random_admissible_override(mbw, mwn, seed + 1)
+    rng = np.random.default_rng(seed + 2)
+    x = jnp.asarray(rng.integers(-2, 3, (g.n_cols, 6)), jnp.float32)
+    ref = (g.to_dense().astype(np.float64)
+           @ np.asarray(x, np.float64)).astype(np.float32)
+
+    for ovr in (None, override):
+        pats = get_partition_patterns(mbw, mwn, mode=mode,
+                                      warp_nzs_override=ovr)
+        bp = block_level_partition(g, pats)
+        slabs = pack_slabs(g, bp)
+        out_b = spmm_blocked(
+            jnp.asarray(slabs["colidx"]), jnp.asarray(slabs["values"]),
+            jnp.asarray(slabs["rowloc"]), jnp.asarray(slabs["out_row"]),
+            x, g.n_rows)
+        np.testing.assert_array_equal(np.asarray(out_b), ref)
+        jslabs = {k: (jnp.asarray(v) if isinstance(v, np.ndarray) else v)
+                  for k, v in slabs.items()}
+        out_p = spmm_pallas(jslabs, x, g.n_rows, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out_p), ref)
+
+
+@pytest.mark.parametrize("mode", ["paper", "tpu"])
+def test_override_of_all_max_warp_nzs_is_the_default_table(mode):
+    mbw, mwn = 8, 4
+    default = get_partition_patterns(mbw, mwn, mode=mode)
+    same = get_partition_patterns(
+        mbw, mwn, mode=mode,
+        warp_nzs_override=np.full(mbw * mwn, mwn))
+    for field in ("factor", "block_rows", "warp_nzs"):
+        np.testing.assert_array_equal(getattr(default, field),
+                                      getattr(same, field))
+
+
+def test_inadmissible_overrides_rejected():
+    mbw, mwn = 4, 8
+    bound = mbw * mwn
+    ok = np.full(bound, mwn)
+    validate_warp_nzs_override(mbw, mwn, ok)            # sanity: passes
+    bad_low = ok.copy()
+    bad_low[0] = 0                                       # below 1
+    with pytest.raises(ValueError, match="degree"):
+        validate_warp_nzs_override(mbw, mwn, bad_low)
+    bad_high = ok.copy()
+    bad_high[3] = mwn + 1                                # above max_warp_nzs
+    with pytest.raises(ValueError, match="degree"):
+        validate_warp_nzs_override(mbw, mwn, bad_high)
+    bad_cover = ok.copy()
+    bad_cover[bound - 1] = mwn - 1      # mbw * (mwn-1) < bound: row uncovered
+    with pytest.raises(ValueError, match="degree"):
+        validate_warp_nzs_override(mbw, mwn, bad_cover)
+    with pytest.raises(ValueError, match="length"):
+        validate_warp_nzs_override(mbw, mwn, ok[:-1])
+    with pytest.raises(ValueError, match="integer"):
+        validate_warp_nzs_override(mbw, mwn, ok.astype(np.float32) + 0.5)
+    # the same guard fires through the pattern-builder entry point
+    with pytest.raises(ValueError):
+        get_partition_patterns(mbw, mwn, warp_nzs_override=bad_cover)

@@ -1,0 +1,330 @@
+"""Online partition autotuner: PlanTuner state machine (fake clock,
+fixed candidates — fully deterministic), the candidate generator, and the
+GraphServeEngine shadow-rollout integration (promotion through the
+version chain, tuned-config spill/reload)."""
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import gcn_normalize
+from repro.core.plan_cache import (PartitionConfig, PlanCache,
+                                   build_partition_plan)
+from repro.core.spmm import make_accel_spmm
+from repro.serve.graph_engine import GraphServeEngine
+from repro.tuning import (PlanTuner, TuningCandidate, default_candidates,
+                          staircase_warp_nzs, tune_offline)
+
+from conftest import make_powerlaw_csr
+
+BASE = PartitionConfig()
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _fixed_candidates(n=2):
+    cfgs = [dataclasses.replace(BASE, max_warp_nzs=BASE.max_warp_nzs // 2),
+            dataclasses.replace(BASE, max_rows_per_block=BASE.deg_bound),
+            dataclasses.replace(
+                BASE, warp_nzs_table=staircase_warp_nzs(
+                    BASE.max_block_warps, BASE.max_warp_nzs))]
+    return [TuningCandidate(config=c, label=f"c{i}")
+            for i, c in enumerate(cfgs[:n])]
+
+
+def _hot_tuner(clock, **kw):
+    kw.setdefault("hot_rate", 10.0)
+    kw.setdefault("shadow_fraction", 1.0)
+    kw.setdefault("win_streak", 2)
+    kw.setdefault("min_improvement", 0.02)
+    kw.setdefault("max_trials", 4)
+    kw.setdefault("candidates", _fixed_candidates())
+    return PlanTuner(now_fn=clock, halflife_s=1.0, **kw)
+
+
+def _heat(tuner, gid="g", n=100):
+    tuner.observe(gid, n)   # burst >> hot_rate * halflife / ln2
+
+
+# ---------------------------------------------------------------------------
+# pure policy: deterministic under the fake clock
+# ---------------------------------------------------------------------------
+def test_cold_graph_never_shadowed():
+    clock = FakeClock()
+    tuner = _hot_tuner(clock)
+    tuner.observe("g", 1)
+    for _ in range(10):
+        assert tuner.next_shadow("g", BASE) is None
+    assert tuner.stats()["tracked"] == 0
+
+
+def test_hot_graph_enters_tuning_and_cools_off_clockwise():
+    clock = FakeClock()
+    tuner = _hot_tuner(clock)
+    _heat(tuner)
+    assert tuner.next_shadow("g", BASE) is not None
+    # an UNSEEN graph whose rate decayed to ~0 stays untracked
+    clock.t += 1000.0
+    tuner.observe("g2", 1)
+    assert tuner.next_shadow("g2", BASE) is None
+
+
+def test_shadow_stride_is_deterministic():
+    clock = FakeClock()
+    tuner = _hot_tuner(clock, shadow_fraction=0.25)
+    _heat(tuner)
+    picks = [tuner.next_shadow("g", BASE) is not None for _ in range(12)]
+    assert picks == [False, False, False, True] * 3
+
+
+def test_win_streak_promotes_and_stops_shadowing():
+    clock = FakeClock()
+    tuner = _hot_tuner(clock)
+    _heat(tuner)
+    cand = tuner.next_shadow("g", BASE)
+    assert tuner.record_shadow("g", cand, 1.0, 0.5) is None
+    winner = tuner.record_shadow("g", cand, 1.0, 0.5)
+    assert winner is cand
+    tuner.confirm_promoted("g")
+    assert tuner.describe("g")["status"] == "promoted"
+    assert tuner.next_shadow("g", BASE) is None
+    s = tuner.stats()
+    assert s["promotions"] == 1 and s["wins"] == 2
+
+
+def test_loss_resets_the_streak():
+    clock = FakeClock()
+    tuner = _hot_tuner(clock, max_trials=10)
+    _heat(tuner)
+    cand = tuner.next_shadow("g", BASE)
+    assert tuner.record_shadow("g", cand, 1.0, 0.5) is None     # win
+    assert tuner.record_shadow("g", cand, 1.0, 0.999) is None   # loss (< 2%)
+    assert tuner.describe("g")["streak"] == 0
+    # needs a fresh full streak after the loss
+    assert tuner.record_shadow("g", cand, 1.0, 0.5) is None
+    assert tuner.record_shadow("g", cand, 1.0, 0.5) is cand
+
+
+def test_max_trials_advances_then_exhausts():
+    clock = FakeClock()
+    tuner = _hot_tuner(clock, max_trials=2, win_streak=2)
+    _heat(tuner)
+    c0 = tuner.next_shadow("g", BASE)
+    tuner.record_shadow("g", c0, 1.0, 2.0)
+    tuner.record_shadow("g", c0, 1.0, 2.0)      # c0 dropped
+    c1 = tuner.next_shadow("g", BASE)
+    assert c1 is not c0 and c1.label == "c1"
+    tuner.record_shadow("g", c1, 1.0, 2.0)
+    tuner.record_shadow("g", c1, 1.0, 2.0)      # list exhausted
+    assert tuner.next_shadow("g", BASE) is None
+    assert tuner.describe("g")["status"] == "exhausted"
+    assert tuner.stats()["exhausted"] == 1
+
+
+def test_candidate_failure_drops_candidate():
+    clock = FakeClock()
+    tuner = _hot_tuner(clock)
+    _heat(tuner)
+    c0 = tuner.next_shadow("g", BASE)
+    tuner.candidate_failed("g", c0)
+    assert tuner.next_shadow("g", BASE).label == "c1"
+    assert tuner.stats()["candidate_failures"] == 1
+
+
+def test_stale_shadow_result_is_ignored():
+    clock = FakeClock()
+    tuner = _hot_tuner(clock)
+    _heat(tuner)
+    c0 = tuner.next_shadow("g", BASE)
+    tuner.candidate_failed("g", c0)             # moved on to c1
+    assert tuner.record_shadow("g", c0, 1.0, 0.1) is None
+    assert tuner.stats()["comparisons"] == 0
+
+
+def test_reset_reenters_tuning_from_scratch():
+    clock = FakeClock()
+    tuner = _hot_tuner(clock)
+    _heat(tuner)
+    c0 = tuner.next_shadow("g", BASE)
+    tuner.record_shadow("g", c0, 1.0, 0.5)
+    tuner.reset("g")
+    assert tuner.describe("g") is None
+    _heat(tuner)
+    again = tuner.next_shadow("g", BASE)
+    assert again.label == "c0" and tuner.describe("g")["trials"] == 0
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        PlanTuner(shadow_fraction=0.0)
+    with pytest.raises(ValueError):
+        PlanTuner(win_streak=3, max_trials=2)
+
+
+# ---------------------------------------------------------------------------
+# candidate generator
+# ---------------------------------------------------------------------------
+def test_default_candidates_admissible_and_nondefault():
+    from repro.core.partition import validate_warp_nzs_override
+    cands = default_candidates(BASE)
+    assert len(cands) >= 4
+    assert len({c.label for c in cands}) == len(cands)
+    for c in cands:
+        assert c.config != BASE or c.backend is not None
+        if c.config.warp_nzs_table is not None:
+            validate_warp_nzs_override(c.config.max_block_warps,
+                                       c.config.max_warp_nzs,
+                                       c.config.warp_nzs_table)
+    # best-guess-first: the halved-slab capacity variant leads the list
+    assert cands[0].label == "half-slab"
+
+
+def test_staircase_table_is_minimal_admissible():
+    mbw, mwn = BASE.max_block_warps, BASE.max_warp_nzs
+    tab = staircase_warp_nzs(mbw, mwn)
+    assert len(tab) == mbw * mwn
+    for d, w in enumerate(tab, start=1):
+        assert 1 <= w <= mwn and mbw * w >= d
+        assert w == 1 or mbw * (w - 1) < d      # cannot shrink further
+
+
+# ---------------------------------------------------------------------------
+# engine integration: shadow rollout end to end
+# ---------------------------------------------------------------------------
+def _graph():
+    return gcn_normalize(make_powerlaw_csr(n=220, seed=7))
+
+
+def _promote(engine, gid, x, deadline_s=30.0):
+    t0 = time.monotonic()
+    while engine.stats()["tuned_promotions"] < 1:
+        engine.serve_one(gid, x)
+        time.sleep(0.005)
+        assert time.monotonic() - t0 < deadline_s, \
+            f"no promotion: {engine.tuner.describe(gid)}"
+
+
+def test_engine_promotes_and_serves_correctly():
+    g = _graph()
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(g.n_cols, 8)),
+                    dtype=jnp.float32)
+    # min_improvement << 0 makes every comparison a win, so the FIRST
+    # candidate promotes after win_streak shadows regardless of timings
+    tuner = PlanTuner(hot_rate=0.0, shadow_fraction=1.0, win_streak=2,
+                      min_improvement=-100.0, max_trials=4,
+                      candidates=_fixed_candidates(1))
+    engine = GraphServeEngine(backend="blocked", tuner=tuner)
+    try:
+        engine.register_graph("hot", g)
+        v0 = engine.plan_for("hot").version
+        _promote(engine, "hot", x)
+        plan = engine.plan_for("hot")
+        assert plan.tuned is not None and plan.tuned["label"] == "c0"
+        assert plan.config == _fixed_candidates(1)[0].config
+        assert plan.version > v0, "promotion must ride the version chain"
+        # the tuned plan answers exactly like the reference operator
+        out = engine.serve_one("hot", x)
+        direct = make_accel_spmm(g)(x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(direct),
+                                   atol=1e-4, rtol=1e-4)
+        s = engine.stats()
+        assert s["tuned_graphs"] == 1 and s["shadow_failures"] == 0
+        assert s["tuner_promotions"] == 1
+    finally:
+        engine.close()
+
+
+def test_reregister_same_content_keeps_tuned_binding():
+    g = _graph()
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(g.n_cols, 8)),
+                    dtype=jnp.float32)
+    tuner = PlanTuner(hot_rate=0.0, shadow_fraction=1.0, win_streak=1,
+                      min_improvement=-100.0, max_trials=2,
+                      candidates=_fixed_candidates(1))
+    engine = GraphServeEngine(backend="blocked", tuner=tuner)
+    try:
+        engine.register_graph("hot", g)
+        _promote(engine, "hot", x)
+        tuned_key = engine.plan_for("hot").key
+        engine.register_graph("hot", g)     # same content: must be a no-op
+        assert engine.plan_for("hot").key == tuned_key
+        assert engine.plan_for("hot").tuned is not None
+    finally:
+        engine.close()
+
+
+def test_shadow_never_blocks_reads_while_busy():
+    """The opportunistic-skip invariant: at most one shadow in flight,
+    extra shadow-due dispatches are counted as skipped, never queued."""
+    g = _graph()
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(g.n_cols, 8)),
+                    dtype=jnp.float32)
+    tuner = PlanTuner(hot_rate=0.0, shadow_fraction=1.0, win_streak=10 ** 6,
+                      min_improvement=10.0, max_trials=10 ** 6,
+                      candidates=_fixed_candidates(2))
+    engine = GraphServeEngine(backend="blocked", tuner=tuner)
+    try:
+        engine.register_graph("hot", g)
+        for _ in range(30):
+            engine.serve_one("hot", x)      # no pacing: worker stays busy
+        s = engine.stats()
+        assert s["shadow_dispatches"] + s["shadow_skipped"] >= 29
+        assert s["tuned_promotions"] == 0
+    finally:
+        engine.close()
+
+
+# ---------------------------------------------------------------------------
+# tuned configs survive disk spill/reload
+# ---------------------------------------------------------------------------
+def test_tuned_plan_roundtrips_through_spill(tmp_path):
+    cache = PlanCache(capacity=1, save_dir=str(tmp_path))
+    cfg = dataclasses.replace(
+        BASE, warp_nzs_table=staircase_warp_nzs(BASE.max_block_warps,
+                                                BASE.max_warp_nzs))
+    g = _graph()
+    plan = cache.get_or_build(g, cfg)
+    plan.tuned = {"backend": None, "grid_order": "block_major",
+                  "label": "wnz-min"}
+    cache.get_or_build(gcn_normalize(make_powerlaw_csr(n=150, seed=8)), BASE)
+    assert cache.stats()["spills"] == 1     # evicted + spilled the tuned plan
+
+    back = cache.get_or_build(g, cfg)       # disk reload, not a rebuild
+    assert cache.stats()["disk_hits"] == 1
+    assert back.tuned == plan.tuned
+    assert back.key == plan.key
+    assert back.key[1].warp_nzs_table == cfg.warp_nzs_table
+    for k in ("colidx", "values", "rowloc", "out_row"):
+        np.testing.assert_array_equal(np.asarray(back.slabs[k]),
+                                      np.asarray(plan.slabs[k]))
+
+
+# ---------------------------------------------------------------------------
+# offline search
+# ---------------------------------------------------------------------------
+def test_tune_offline_ranks_candidates():
+    g = _graph()
+    rep = tune_offline(g, feat_dim=8, repeats=1,
+                       candidates=_fixed_candidates(2))
+    assert {r["label"] for r in rep["candidates"]} == {"c0", "c1"}
+    assert all("time_s" in r for r in rep["candidates"])
+    assert rep["best"]["label"] in {"c0", "c1"}
+    assert rep["base"]["time_s"] > 0
+
+
+def test_tune_offline_broken_candidate_is_a_result_not_a_crash():
+    g = _graph()
+    bad = TuningCandidate(config=BASE, backend="no-such-backend",
+                          label="broken")
+    rep = tune_offline(g, feat_dim=8, repeats=1, candidates=[bad])
+    (row,) = rep["candidates"]
+    assert row["label"] == "broken" and "error" in row
+    assert rep["best"] is None and rep["best_speedup"] == 0.0
