@@ -29,6 +29,12 @@ Emits ``name,us_per_call,derived`` CSV. Sections:
             live shadow-measured promotion loop (steady-state tuned vs
             default dispatch), and the shadow p99-overhead check (merges
             a "tuning" key into benchmarks/results/serve_stats.json)
+  sample    neighbor-sampling service: zipf seed-stream frontier hit rate,
+            sampled-path throughput, full-fanout exactness vs the full
+            graph on both backends, and the two-subprocess partitioned
+            store with cross-partition frontier exchange (merges a
+            "sampling" key into benchmarks/results/serve_stats.json;
+            nightly gates with --require-sampling)
   moe       beyond-paper: block dispatch for MoE
   roofline  summary rows from the dry-run results (if present)
 """
@@ -72,11 +78,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6,table2,preproc,repair,"
-                         "serve,routing,fleet,multihost,tune,moe,roofline")
+                         "serve,routing,fleet,multihost,tune,sample,moe,"
+                         "roofline")
     ap.add_argument("--budget-edges", type=int, default=200_000)
     args = ap.parse_args()
-    # multihost spawns its own 2-process fleet, so it is opt-in (not part
-    # of the default sweep: nightly CI runs it explicitly)
+    # multihost and sample spawn their own 2-process fleets, so they are
+    # opt-in (not part of the default sweep: nightly CI runs them
+    # explicitly)
     want = set(args.only.split(",")) if args.only else \
         {"fig5", "fig6", "table2", "preproc", "repair", "serve", "routing",
          "fleet", "tune", "moe", "roofline"}
@@ -121,6 +129,10 @@ def main() -> None:
     if "tune" in want:
         from .tune_partition import run as tune
         for r in tune(budget_edges=args.budget_edges):
+            print(r)
+    if "sample" in want:
+        from .sampling_serve import run as sample
+        for r in sample(budget_edges=args.budget_edges):
             print(r)
     if "moe" in want:
         from .moe_dispatch import run as moe

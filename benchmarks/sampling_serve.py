@@ -1,0 +1,266 @@
+"""Sampled-inference benchmark: the neighbor-sampling service end to end.
+
+Four sections, all landing under the ``"sampling"`` key of
+``benchmarks/results/serve_stats.json`` (nightly gates with
+``scripts/check_bench.py --require-sampling``):
+
+  sample/zipf_hit_rate   a zipf-distributed seed-batch stream (production
+                         seed batches recur heavily) through the frontier
+                         LRU — acceptance: hit rate >= 0.5, i.e. recurring
+                         frontiers amortize both the sampling AND their
+                         partition plans
+  sample/throughput      steady-state sampled 2-layer GCN inference
+                         (seeds/s through the plan-cache/SpMM path)
+  sample/exact_*         full-fanout sampled inference vs the full-graph
+                         reference on BOTH kernel backends — acceptance:
+                         bit-for-bit equal
+  sample/partitioned     a two-subprocess partitioned store (REAL peer
+                         data plane): each rank owns half the nodes,
+                         frontiers straddle the boundary through
+                         FrontierExchange — acceptance: sampling parity
+                         with the monolithic store, remote hops actually
+                         crossed, zero failovers
+"""
+from __future__ import annotations
+
+import json
+import os
+import textwrap
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from .common import csv_row
+from .serve_graphs import RESULTS_JSON
+
+
+def _build(n: int, m: int, seed: int = 0):
+    import jax
+    from repro.data.graphs import make_power_law_graph
+    from repro.models.gcn import init_gcn
+    from repro.sampling import GraphStore
+
+    store = GraphStore.build(make_power_law_graph(n, m, seed=seed),
+                             normalize=True)
+    rng = np.random.default_rng(seed + 1)
+    x = rng.normal(size=(n, 16)).astype(np.float32)
+    params = init_gcn(jax.random.PRNGKey(seed), [16, 16, 8])
+    return store, x, params
+
+
+def _zipf_stream(backend: str, budget_edges: int) -> Dict:
+    """Zipf-recurring seed batches through the frontier LRU."""
+    from repro.data.graphs import seed_batches, seed_splits
+    from repro.sampling import SamplingService
+    from repro.serve import GraphServeEngine
+
+    n = max(1000, min(4000, budget_edges // 12))
+    store, x, params = _build(n, min(budget_edges, 8 * n), seed=3)
+    engine = GraphServeEngine(backend=backend)
+    try:
+        svc = SamplingService(engine, store, fanouts=[8, 8], store=store,
+                              max_cached_frontiers=48)
+        train, _ = seed_splits(n, [0.3, 0.1], seed=0)
+        batches = [b for _, b in zip(range(40), seed_batches(
+            train, 32, seed=1))]
+        # zipf over the batch pool: a handful of hot batches dominate
+        zipf = np.random.default_rng(2).zipf(1.3, size=240)
+        order = [batches[int(z - 1) % len(batches)] for z in zipf]
+        for b in order[:8]:
+            svc.infer(b, x, params)               # warm plans + compile
+        t0 = time.perf_counter()
+        seeds_served = 0
+        for b in order:
+            svc.infer(b, x, params)
+            seeds_served += len(b)
+        wall = time.perf_counter() - t0
+        st = svc.stats()
+        est = engine.stats()
+        return {
+            "backend": backend,
+            "n_nodes": n,
+            "batches": len(order),
+            "hit_rate": st["frontier_hit_rate"],
+            "frontier_hits": st["frontier_hits"],
+            "frontier_misses": st["frontier_misses"],
+            "sampled_edges": st["sampled_edges"],
+            "plan_cache_hits": est["cache_hits"],
+            "seeds_per_s": seeds_served / wall if wall else 0.0,
+            "us_per_batch": wall / len(order) * 1e6,
+        }
+    finally:
+        engine.close()
+
+
+def _exactness(backend: str, budget_edges: int) -> Dict:
+    """Full-fanout sampled 2-layer GCN vs the full-graph reference."""
+    import jax
+    import jax.numpy as jnp
+    from repro.sampling import SamplingService
+    from repro.serve import GraphServeEngine
+
+    n = max(400, min(1200, budget_edges // 40))
+    store, x, params = _build(n, 6 * n, seed=5)
+    engine = GraphServeEngine(backend=backend)
+    try:
+        engine.register_graph("full", store.in_adj)
+        svc = SamplingService(engine, store, fanouts=[None, None],
+                              store=store)
+        h = jnp.asarray(x)
+        for i, p in enumerate(params):
+            agg = engine.submit("full", jnp.dot(h, p["w"])).result()
+            h = agg + p["b"]
+            if i < len(params) - 1:
+                h = jax.nn.relu(h)
+        ref = np.asarray(h)
+        seeds = np.random.default_rng(0).choice(n, 48, replace=False)
+        out = svc.infer(seeds, x, params)
+        return {"backend": backend, "n_nodes": n,
+                "exact": bool(np.array_equal(out, ref[seeds])),
+                "max_abs_diff": float(np.abs(out - ref[seeds]).max())}
+    finally:
+        engine.close()
+
+
+_PARTITION_WORKER = textwrap.dedent("""
+    import json, os, threading, time
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    from repro.data.graphs import make_power_law_graph
+    from repro.distributed.multihost import (
+        FrontierExchange, PeerClient, PeerServer, peer_ports,
+    )
+    from repro.sampling import (
+        GraphStore, PartitionedStoreClient, sample_frontier,
+    )
+
+    rank = int(os.environ["REPRO_MH_PID"])
+    nprocs = int(os.environ["REPRO_MH_NPROCS"])
+    n = int(os.environ.get("REPRO_MH_SAMPLE_NODES", "2000"))
+    ports = peer_ports()
+
+    full = GraphStore.build(make_power_law_graph(n, 6 * n, seed=0),
+                            normalize=True)
+    shards = full.partition(nprocs)
+    bounds = [s.node_range[0] for s in shards] + [full.n_nodes]
+
+    server = PeerServer(ports[rank], process_index=rank, epoch=0,
+                        n_devices=1)
+    FrontierExchange.serve(server, shards[rank])
+    done = threading.Event()
+    server.register("peer-done", lambda _p: done.set())
+
+    peers = {r: PeerClient(("127.0.0.1", p), process_index=rank)
+             for r, p in ports.items() if r != rank}
+    exchange = FrontierExchange(peers)
+    client = PartitionedStoreClient(shards[rank], bounds,
+                                    exchange.remote_map(), rank)
+
+    rng = np.random.default_rng(rank)
+    checks, t0 = [], time.perf_counter()
+    for i in range(6):
+        seeds = rng.choice(n, 24, replace=False)
+        fp = sample_frontier(client.sample_in_neighbors, seeds, [4, 4],
+                             seed=i)
+        fm = sample_frontier(full.sample_in_neighbors, seeds, [4, 4],
+                             seed=i)
+        checks.append(fp.content_key() == fm.content_key())
+    wall = time.perf_counter() - t0
+
+    for peer in peers.values():
+        peer.request("peer-done", None)
+    assert done.wait(300), "peer never finished sampling"
+    for peer in peers.values():
+        peer.close()
+    server.close()
+    print(json.dumps({"rank": rank, "parity": all(checks),
+                      "frontiers": len(checks),
+                      "remote_edges": int(client.remote_edges),
+                      "local_edges": int(client.local_edges),
+                      "failovers": exchange.failovers,
+                      "requests": exchange.requests,
+                      "wall_s": wall}))
+""")
+
+
+def _partitioned(budget_edges: int, num_processes: int = 2) -> Dict:
+    from repro.distributed.multihost import run_cpu_fleet
+
+    repo_root = os.path.join(os.path.dirname(__file__), "..")
+    n = max(800, min(3000, budget_edges // 12))
+    records = run_cpu_fleet(
+        _PARTITION_WORKER, num_processes=num_processes, n_local_devices=1,
+        timeout_s=420, cwd=repo_root,
+        extra_env={"REPRO_MH_SAMPLE_NODES": str(n)})
+    records.sort(key=lambda r: r["rank"])
+    return {
+        "processes": num_processes,
+        "n_nodes": n,
+        "per_rank": records,
+        "parity": all(r["parity"] for r in records),
+        "remote_edges": sum(r["remote_edges"] for r in records),
+        "local_edges": sum(r["local_edges"] for r in records),
+        "failovers": sum(r["failovers"] for r in records),
+        "exchange_requests": sum(r["requests"] for r in records),
+        "wall_s": max(r["wall_s"] for r in records),
+    }
+
+
+def run(budget_edges: int = 200_000,
+        skip_partitioned: bool = False) -> List[str]:
+    rows: List[str] = []
+    results: Dict = {}
+
+    stream = _zipf_stream("blocked", budget_edges)
+    results["zipf_stream"] = stream
+    rows.append(csv_row(
+        "sample/zipf_hit_rate", stream["us_per_batch"],
+        f"hit_rate={stream['hit_rate']:.3f};"
+        f"hits={stream['frontier_hits']};"
+        f"misses={stream['frontier_misses']};"
+        f"plan_hits={stream['plan_cache_hits']}"))
+    rows.append(csv_row(
+        "sample/throughput", stream["us_per_batch"],
+        f"seeds_per_s={stream['seeds_per_s']:.0f};"
+        f"batches={stream['batches']};n={stream['n_nodes']}"))
+
+    results["exactness"] = {}
+    for backend in ("blocked", "pallas"):
+        ex = _exactness(backend, budget_edges)
+        results["exactness"][backend] = ex
+        rows.append(csv_row(
+            f"sample/exact_{backend}", 0.0,
+            f"exact={ex['exact']};max_abs_diff={ex['max_abs_diff']:.3g}"))
+
+    if not skip_partitioned:
+        part = _partitioned(budget_edges)
+        results["partitioned"] = part
+        rows.append(csv_row(
+            "sample/partitioned", part["wall_s"] * 1e6,
+            f"parity={part['parity']};"
+            f"remote_edges={part['remote_edges']};"
+            f"failovers={part['failovers']};"
+            f"requests={part['exchange_requests']}"))
+
+    merged = {}
+    if os.path.exists(RESULTS_JSON):
+        try:
+            with open(RESULTS_JSON) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged["sampling"] = results
+    os.makedirs(os.path.dirname(RESULTS_JSON), exist_ok=True)
+    with open(RESULTS_JSON, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+    rows.append(csv_row("sample/stats_json", 0.0,
+                        f"json={os.path.relpath(RESULTS_JSON)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in run():
+        print(r)

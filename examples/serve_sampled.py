@@ -1,0 +1,130 @@
+"""Serve seed-node batches of ONE giant evolving graph by sampled inference.
+
+    PYTHONPATH=src python examples/serve_sampled.py
+
+The million-node-graph story at desk scale. Instead of registering many
+small graphs, a single big graph lives in a :class:`GraphStore` (both
+adjacency orientations, fed by streaming ``EdgeDelta``\\ s) and
+:class:`SamplingService` answers per-seed-batch queries:
+
+1. sample a k-hop frontier for the seed batch (deterministic per
+   ``(seed, hop, node)`` — the same seeds always draw the same frontier),
+2. compact it into per-hop bipartite blocks and register them with the
+   serving engine under CONTENT-derived ids (recurring frontiers
+   partition exactly once),
+3. run the GCN layers through the plan-cache/batched-SpMM path, gathering
+   only the seed rows at the end.
+
+Under FULL fanout the sampled result is bit-identical to running the
+whole graph — demonstrated below — while capped fanouts bound per-batch
+work no matter how big the graph gets. The final sections stream edge
+deltas into the live store (cached frontiers repair through
+``engine.mutate()`` or drop — never stale) and shard the store into two
+partitions with sampling routed by ownership.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.plan_repair import EdgeDelta
+from repro.data.graphs import (
+    make_power_law_graph, node_features, seed_batches, seed_splits,
+)
+from repro.models.gcn import init_gcn
+from repro.sampling import GraphStore, PartitionedStoreClient, SamplingService
+from repro.serve import GraphServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=3000)
+    ap.add_argument("--edges", type=int, default=18000)
+    ap.add_argument("--dims", type=int, nargs="+", default=[32, 64, 16])
+    ap.add_argument("--fanout", type=int, default=10)
+    ap.add_argument("--batch-size", type=int, default=64)
+    args = ap.parse_args()
+    n = args.nodes
+
+    store = GraphStore.build(make_power_law_graph(n, args.edges, seed=0),
+                             normalize=True)
+    engine = GraphServeEngine(backend="blocked")
+    x = node_features(n, args.dims[0], seed=1)
+    params = init_gcn(jax.random.PRNGKey(0), args.dims)
+    n_hops = len(args.dims) - 1
+    print(f"[serve_sampled] store: {store.n_nodes} nodes "
+          f"{store.n_edges} edges (normalized, both orientations)")
+
+    # ---- full fanout == the full graph, bit for bit ----------------------
+    svc_full = SamplingService(engine, store, fanouts=[None] * n_hops,
+                               store=store)
+    engine.register_graph("full", store.in_adj)
+    h = jax.numpy.asarray(x)
+    for i, p in enumerate(params):
+        h = engine.submit("full", jax.numpy.dot(h, p["w"])).result() + p["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    ref = np.asarray(h)
+    seeds = np.random.default_rng(2).choice(n, 32, replace=False)
+    out = svc_full.infer(seeds, x, params)
+    assert np.array_equal(out, ref[seeds])
+    f = svc_full.frontier_for(seeds)
+    print(f"[serve_sampled] full fanout: frontier layers "
+          f"{[len(l) for l in f.layers]} -> output BIT-identical to the "
+          f"full graph on {len(seeds)} seeds  OK")
+
+    # ---- capped fanout: bounded frontiers, recurring batches amortize ----
+    svc = SamplingService(engine, store, fanouts=[args.fanout] * n_hops,
+                          store=store)
+    train, _val = seed_splits(n, [0.5, 0.2], seed=3)
+    batches = [b for _, b in zip(range(8), seed_batches(
+        train, args.batch_size, seed=4))]
+    t0 = time.perf_counter()
+    for _epoch in range(3):                 # epochs revisit the same batches
+        for b in batches:
+            svc.infer(b, x, params)
+    dt = time.perf_counter() - t0
+    st, est = svc.stats(), engine.stats()
+    print(f"[serve_sampled] fanout={args.fanout}: "
+          f"{3 * len(batches)} batches in {dt:.2f}s — frontier hit rate "
+          f"{st['frontier_hit_rate']:.2f} ({st['frontier_misses']} sampled, "
+          f"{st['frontier_hits']} reused), plan cache hit rate "
+          f"{est['cache_hit_rate']:.2f}")
+
+    # ---- the graph is ALIVE: stream a delta into the store ---------------
+    rng = np.random.default_rng(5)
+    delta = EdgeDelta(insert_src=rng.integers(0, n, 4),
+                      insert_dst=batches[0][:4],   # aimed at a cached
+                      #                              frontier's seeds
+                      insert_val=rng.random(4).astype(np.float32),
+                      on_duplicate="replace")
+    store.apply_delta(delta)                # both orientations + listeners
+    st = svc.stats()
+    print(f"[serve_sampled] delta applied (store v{store.version}): "
+          f"{st['frontier_mutations']} cached frontiers repaired via "
+          f"mutate(), {st['frontiers_invalidated']} dropped for resampling "
+          f"— nothing stale survives")
+    svc.infer(batches[0], x, params)        # serves the post-delta graph
+
+    # ---- partition the store: sampling routed by node ownership ----------
+    shards = store.partition(2)
+    bounds = [s.node_range[0] for s in shards] + [n]
+    # in-process stand-in for the remote side; across real hosts this is
+    # FrontierExchange.sampler_for(rank) over PeerClient channels
+    remote = {1: shards[1].sample_in_neighbors}
+    client = PartitionedStoreClient(shards[0], bounds, remote, 0)
+    from repro.sampling import sample_frontier
+    fp = sample_frontier(store.sample_in_neighbors, seeds,
+                         [None] * n_hops, seed=0)   # monolithic reference
+    fq = sample_frontier(client.sample_in_neighbors, seeds,
+                         [None] * n_hops, seed=0)
+    assert fq.content_key() == fp.content_key()
+    print(f"[serve_sampled] partitioned store: {client.local_edges} local "
+          f"+ {client.remote_edges} cross-partition edges sampled — "
+          f"frontier identical to the monolithic store  OK")
+    engine.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -180,6 +180,34 @@ def check_tuning(g: Gate, s: Dict, *, parallel: bool) -> None:
                f"shares the lone core with live dispatches")
 
 
+def check_sampling(g: Gate, s: Dict) -> None:
+    sm = s.get("sampling")
+    if sm is None:
+        g.check(False, "sampling section present in results "
+                       "(run benchmarks with --only sample)")
+        return
+    hr = sm["zipf_stream"]["hit_rate"]
+    g.check(hr >= 0.5,
+            f"zipf seed-stream frontier hit rate: {hr:.3f} >= 0.5")
+    for backend, ex in sorted(sm["exactness"].items()):
+        g.check(ex["exact"],
+                f"full-fanout sampled inference bit-exact on {backend}: "
+                f"max_abs_diff={ex['max_abs_diff']:.3g}")
+    part = sm.get("partitioned")
+    if part is None:
+        g.check(False, "partitioned-store run present in sampling section")
+        return
+    g.check(part["parity"],
+            "partitioned sampling matches the monolithic store "
+            f"({part['processes']} processes, "
+            f"{len(part['per_rank'])} ranks reporting)")
+    g.check(part["remote_edges"] >= 1,
+            f"cross-partition hops actually crossed the data plane: "
+            f"remote_edges={part['remote_edges']}")
+    g.check(part["failovers"] == 0,
+            f"no frontier-exchange failovers: {part['failovers']}")
+
+
 def check_regression(g: Gate, s: Dict, baseline_path: str) -> None:
     if not os.path.exists(baseline_path):
         g.check(False, f"baseline missing: {baseline_path}")
@@ -218,6 +246,9 @@ def main(argv=None) -> int:
     ap.add_argument("--require-tuning", action="store_true",
                     help="also gate the partition-autotuner section "
                          "(produced by --only tune; nightly runs it)")
+    ap.add_argument("--require-sampling", action="store_true",
+                    help="also gate the neighbor-sampling section "
+                         "(produced by --only sample; nightly runs it)")
     ap.add_argument("--parallel", choices=["auto", "on", "off"],
                     default="auto",
                     help="enforce the parallel-hardware gates (occupancy "
@@ -249,6 +280,11 @@ def main(argv=None) -> int:
     else:
         g.info("tuning section absent, skipped "
                "(pass --require-tuning to make that a failure)")
+    if args.require_sampling or "sampling" in s:
+        check_sampling(g, s)
+    else:
+        g.info("sampling section absent, skipped "
+               "(pass --require-sampling to make that a failure)")
     check_regression(g, s, args.baseline)
 
     if g.failures:

@@ -20,6 +20,7 @@ __all__ = [
     "gcn_normalize",
     "csr_from_edges",
     "csr_apply_edge_delta",
+    "csr_transpose",
 ]
 
 
@@ -344,6 +345,34 @@ def csr_apply_edge_delta(
         values[ins_dst_pos] = ins_val[order]
 
     return CSRGraph(new_rowptr, colidx, values, g.n_cols)
+
+
+def csr_transpose(g: CSRGraph) -> CSRGraph:
+    """CSC view of ``g`` as a CSRGraph: row ``v`` of the result lists the
+    rows of ``g`` that have an edge INTO ``v`` (the in-adjacency view the
+    neighbor sampler walks). O(E) counting build, no sort.
+
+    Within each transposed row the entries appear in ascending source-row
+    order (the row-major CSR scan is stable), so transposing twice
+    round-trips a canonically ordered CSR exactly. Edge values ride along
+    unchanged; ``perm`` does not survive (the result is a different matrix).
+    """
+    n_rows_t = g.n_cols
+    row_of = np.repeat(np.arange(g.n_rows, dtype=np.int64),
+                       np.diff(g.rowptr))
+    counts = np.bincount(g.colidx, minlength=n_rows_t)
+    rowptr_t = np.zeros(n_rows_t + 1, dtype=np.int64)
+    np.cumsum(counts, out=rowptr_t[1:])
+    # slot of edge e = start of its destination's class + #earlier edges
+    # with the same destination (stable placement, same trick as the
+    # counting degree sort above)
+    rank = _rank_within_class(np.asarray(g.colidx, dtype=np.int64))
+    pos = rowptr_t[np.asarray(g.colidx, dtype=np.int64)] + rank
+    colidx_t = np.empty(g.nnz, dtype=np.int64)
+    values_t = np.empty(g.nnz, dtype=np.float32)
+    colidx_t[pos] = row_of
+    values_t[pos] = g.values
+    return CSRGraph(rowptr_t, colidx_t, values_t, g.n_rows)
 
 
 def csr_from_edges(src: np.ndarray, dst: np.ndarray, n: int,

@@ -12,7 +12,7 @@ reproducible bit-for-bit from (name, seed).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Iterator, Sequence, Tuple
 
 import numpy as np
 
@@ -81,3 +81,50 @@ def node_features(n: int, d: int, seed: int = 0) -> np.ndarray:
 def node_labels(n: int, n_classes: int, seed: int = 0) -> np.ndarray:
     rng = np.random.default_rng(seed + 2)
     return rng.integers(0, n_classes, size=n).astype(np.int32)
+
+
+def seed_splits(n: int, fractions: Sequence[float],
+                seed: int = 0) -> Tuple[np.ndarray, ...]:
+    """Disjoint seed-node masks (train/val/test style) over ``n`` nodes.
+
+    ``fractions`` are consumed in order off one seeded permutation, so the
+    split is deterministic in (n, fractions, seed) and masks never overlap.
+    ``sum(fractions)`` may be < 1 (the remainder is unassigned) but not > 1.
+    Returns one bool[n] mask per fraction.
+    """
+    total = float(sum(fractions))
+    if total > 1.0 + 1e-9:
+        raise ValueError(f"fractions sum to {total} > 1")
+    order = np.random.default_rng(seed).permutation(n)
+    masks = []
+    lo = 0
+    for f in fractions:
+        hi = lo + int(round(f * n))
+        m = np.zeros(n, dtype=bool)
+        m[order[lo:hi]] = True
+        masks.append(m)
+        lo = hi
+    return tuple(masks)
+
+
+def seed_batches(seeds: np.ndarray, batch_size: int, *, seed: int = 0,
+                 epochs: int = 1,
+                 shuffle: bool = True) -> Iterator[np.ndarray]:
+    """Deterministic seed-node batch iterator for sampled inference/training.
+
+    ``seeds`` is a node-id array or a bool mask (converted via flatnonzero).
+    Each epoch reshuffles with rng([seed, epoch]), so the full batch
+    sequence is reproducible from (seeds, batch_size, seed) alone. The last
+    short batch of an epoch is yielded, never dropped.
+    """
+    ids = np.asarray(seeds)
+    if ids.dtype == bool:
+        ids = np.flatnonzero(ids)
+    ids = ids.astype(np.int64)
+    if batch_size <= 0:
+        raise ValueError("batch_size must be positive")
+    for epoch in range(epochs):
+        order = (np.random.default_rng([seed, epoch]).permutation(len(ids))
+                 if shuffle else np.arange(len(ids)))
+        for lo in range(0, len(ids), batch_size):
+            yield ids[order[lo:lo + batch_size]]

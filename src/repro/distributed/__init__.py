@@ -24,6 +24,7 @@ The serving entry points sit in :mod:`repro.serve.fleet`
 """
 from .directory import HostInfo, Placement, PlacementDirectory
 from .multihost import (
+    FrontierExchange,
     MultihostContext,
     PeerClient,
     PeerServer,
@@ -46,6 +47,7 @@ __all__ = [
     "ConsistentHashRing",
     "EwmaRate",
     "FleetPlanCache",
+    "FrontierExchange",
     "HostInfo",
     "ReplicaManager",
     "MultihostContext",

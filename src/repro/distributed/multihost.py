@@ -44,12 +44,15 @@ import time
 import traceback
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 __all__ = [
     "MultihostContext",
     "initialize_multihost",
     "peer_ports",
     "PeerServer",
     "PeerClient",
+    "FrontierExchange",
     "free_port",
     "run_cpu_fleet",
 ]
@@ -344,6 +347,75 @@ class PeerClient:
     def close(self) -> None:
         with self._lock:
             self._reset_locked()
+
+
+class FrontierExchange:
+    """Cross-partition frontier exchange over the peer data plane.
+
+    The sampling layer partitions the graph store into contiguous node
+    ranges, one shard per host; sampling a frontier layer then needs the
+    in-edges of REMOTE-owned nodes. This class is both ends of that hop:
+
+    * ``serve(server, store)`` registers the ``"sample-hop"`` op on a
+      host's :class:`PeerServer`, answering peers' sample requests from
+      the local shard (arrays in, arrays out — one round trip per
+      (hop, owner) pair, not per node);
+    * ``sampler_for(rank)`` wraps a :class:`PeerClient` into the
+      ``SampleFn`` shape :class:`~repro.sampling.store.GraphStore` uses,
+      ready to drop into a ``PartitionedStoreClient``'s remote map.
+
+    A transport failure counts one failover, then ONE reconnect retry
+    (the channel resets itself on error); a second failure raises —
+    unlike plan forwarding there is no local fallback, the remote shard
+    is the only holder of those rows. The nightly partitioned-store gate
+    asserts ``failovers == 0`` on a healthy fleet.
+    """
+
+    OP = "sample-hop"
+
+    def __init__(self, peers: "Dict[int, PeerClient]"):
+        self.peers = dict(peers)
+        self.failovers = 0
+        self.requests = 0
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def serve(server: "PeerServer", store) -> None:
+        """Install the remote end: answer sample requests from ``store``
+        (anything with the ``sample_in_neighbors`` signature)."""
+        def _handle(payload: Dict[str, Any]) -> Dict[str, Any]:
+            src, dst, val = store.sample_in_neighbors(
+                np.asarray(payload["nodes"], dtype=np.int64),
+                payload["fanout"], seed=int(payload["seed"]),
+                hop=int(payload["hop"]),
+                replace=bool(payload["replace"]))
+            return {"src": src, "dst": dst, "val": val}
+        server.register(FrontierExchange.OP, _handle)
+
+    def sampler_for(self, rank: int):
+        """A ``SampleFn`` that samples on host ``rank``'s shard."""
+        client = self.peers[rank]
+
+        def _sample(nodes, fanout=None, *, seed=0, hop=0, replace=False):
+            payload = {"nodes": np.asarray(nodes, dtype=np.int64),
+                       "fanout": fanout, "seed": seed, "hop": hop,
+                       "replace": replace}
+            with self._lock:
+                self.requests += 1
+            try:
+                out = client.request(self.OP, payload)
+            except ConnectionError:
+                with self._lock:
+                    self.failovers += 1
+                out = client.request(self.OP, payload)  # channel was reset
+            return out["src"], out["dst"], out["val"]
+
+        return _sample
+
+    def remote_map(self) -> Dict[int, Any]:
+        """``{rank: SampleFn}`` for every connected peer — the ``remote=``
+        argument of a ``PartitionedStoreClient``."""
+        return {rank: self.sampler_for(rank) for rank in self.peers}
 
 
 # --------------------------------------------------------------------------

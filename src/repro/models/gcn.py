@@ -16,18 +16,11 @@ from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..core.graph import CSRGraph, csr_from_edges
+from ..core.graph import CSRGraph, csr_transpose
 from ..core.plan_cache import PlanCache
 from ..core.spmm import AccelSpMM, make_accel_spmm
 from .layers import dense_init
-
-
-def _transpose_csr(g: CSRGraph) -> CSRGraph:
-    row_of = np.repeat(np.arange(g.n_rows), np.diff(g.rowptr))
-    return csr_from_edges(g.colidx.astype(np.int64), row_of.astype(np.int64),
-                          g.n_cols, values=g.values)
 
 
 @dataclasses.dataclass
@@ -45,7 +38,7 @@ class GraphOp:
         return cls(
             fwd=make_accel_spmm(g_norm, backend=backend,
                                 plan_cache=plan_cache, **kw),
-            bwd=make_accel_spmm(_transpose_csr(g_norm), backend=backend,
+            bwd=make_accel_spmm(csr_transpose(g_norm), backend=backend,
                                 plan_cache=plan_cache, **kw))
 
     def __call__(self, x: jax.Array) -> jax.Array:

@@ -1,0 +1,25 @@
+"""Neighbor-sampling service over a partitioned graph store.
+
+The million-node-graph serving layer: ONE huge evolving graph
+(:class:`GraphStore`, both adjacency orientations + the ``EdgeDelta``
+feed), seeded k-hop frontier sampling with induced-subgraph compaction
+(:func:`sample_frontier`), and :class:`SamplingService`, which feeds the
+compacted frontiers through the plan-cache/batched-SpMM serving path —
+sampled frontiers are exactly the recurring small-graph workload the
+engine is already fast at. ``GraphStore.partition`` +
+:class:`PartitionedStoreClient` +
+:class:`~repro.distributed.multihost.FrontierExchange` spread the store
+over the fleet's hosts with cross-partition hops on the peer data plane.
+"""
+from .sampler import Frontier, FrontierBlock, sample_frontier
+from .service import SamplingService
+from .store import GraphStore, PartitionedStoreClient
+
+__all__ = [
+    "Frontier",
+    "FrontierBlock",
+    "GraphStore",
+    "PartitionedStoreClient",
+    "SamplingService",
+    "sample_frontier",
+]

@@ -730,6 +730,10 @@ class MultihostGraphEngine(FleetGraphEngine):
         # placements — only a PERSISTENT failure evicts the host
         self.evict_after_failures = evict_after_failures
         self._peer_failures: Dict[int, int] = {}
+        # graph ids registered via register_subgraph: frontier subgraphs
+        # are sampled near the data, so they serve from THIS host and
+        # never enter the placement directory (guarded by _bind_lock)
+        self._local_only: set = set()
 
     # ----------------------------------------------------------------- peers
     def connect_peers(self) -> Dict[int, int]:
@@ -823,6 +827,28 @@ class MultihostGraphEngine(FleetGraphEngine):
             key, lambda: build_partition_plan(g, self.config,
                                               graph_hash=key[0]))
 
+    def register_subgraph(self, g: CSRGraph, prefix: str = "sub",
+                          normalize: bool = False) -> str:
+        """Register a frontier subgraph LOCALLY — sampling happens near
+        the data, so the induced subgraph must serve from this host, not
+        wherever the directory's consistent hash would place its key.
+        Uses the single-host fleet path (local device placement via
+        ``FleetPlanCache``) and marks the id so ``_flush_reads`` never
+        consults the directory or forwards it to a peer.
+        """
+        if normalize:
+            g = gcn_normalize(g)
+        graph_id = f"{prefix}:{graph_content_hash(g)[:16]}"
+        with self._bind_lock:
+            self._local_only.add(graph_id)
+        FleetGraphEngine.register_graph(self, graph_id, g)
+        return graph_id
+
+    def unregister_graph(self, graph_id: str) -> bool:
+        with self._bind_lock:
+            self._local_only.discard(graph_id)
+        return super().unregister_graph(graph_id)
+
     # ------------------------------------------------------------------ flush
     def _flush_reads(self, items: List[WorkItem]) -> None:
         """Split the read share of a flush by owning host FIRST; the local
@@ -840,6 +866,9 @@ class MultihostGraphEngine(FleetGraphEngine):
             if any(len(it.payload) > 2 for it in grp):
                 local.extend(grp)     # pinned by a peer forward: never bounce
                 continue
+            if gid in self._local_only:
+                local.extend(grp)     # frontier subgraph: sampled near the
+                continue              # data, never directory-placed
             # consult the full replica set: a plan replicated ONTO this
             # host serves locally even when another host owns the primary
             reps = self.directory.replicas(self._keys[gid])
@@ -944,6 +973,10 @@ class MultihostGraphEngine(FleetGraphEngine):
         reachable host) already stops requests from being FORWARDED to it
         for this graph's new key.
         """
+        if gid in self._local_only:
+            # frontier subgraph: repair through the single-host path — no
+            # broadcast, no directory transition (the id was never placed)
+            return GraphServeEngine._apply_mutation(self, gid, grp)
         deltas: List[EdgeDelta] = [it.payload[1] for it in grp]
         info = self._apply_deltas_local(gid, deltas)
         if self.process_count > 1 and self.peers:

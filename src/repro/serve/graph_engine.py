@@ -251,6 +251,72 @@ class GraphServeEngine:
             self._versions[graph_id] = version
         return plan
 
+    def register_subgraph(self, g: CSRGraph, prefix: str = "sub",
+                          normalize: bool = False) -> str:
+        """Register an induced subgraph under a CONTENT-DERIVED id.
+
+        The id is ``f"{prefix}:{content_hash[:16]}"`` — the same frontier
+        sampled twice registers under the same id and partitions exactly
+        once (registration is idempotent on identical content). This is
+        the submission path for sampled-inference frontiers: callers never
+        invent ids, so recurring frontiers from different callers share
+        one plan-cache entry. Returns the graph id to pass to ``submit``.
+        """
+        if normalize:
+            g = gcn_normalize(g)
+        graph_id = f"{prefix}:{graph_content_hash(g)[:16]}"
+        self.register_graph(graph_id, g)
+        return graph_id
+
+    def unregister_graph(self, graph_id: str) -> bool:
+        """Drop a graph's binding (id -> graph/key/version/tuned hints).
+
+        The plan itself stays in the LRU cache until evicted — a later
+        ``register_subgraph`` of the same content re-binds without a
+        rebuild. The caller must have drained in-flight work for the id
+        (the sampling service evicts only after results are gathered);
+        the engine does not fence racing submits. Returns whether the id
+        was registered.
+        """
+        with self._bind_lock:
+            known = graph_id in self._graphs
+            self._graphs.pop(graph_id, None)
+            self._keys.pop(graph_id, None)
+            self._versions.pop(graph_id, None)
+            self._tuned_hints.pop(graph_id, None)
+        return known
+
+    def submit_gather(self, graph_id: str, x: jax.Array,
+                      rows: np.ndarray, *, block: bool = True,
+                      klass: str = "default",
+                      tenant: Optional[str] = None) -> Future:
+        """``submit`` plus a gather epilogue: the returned ``Future``
+        resolves to ``aggregation[rows]`` instead of the full ``[n_rows,
+        F]`` output. This is how sampled inference extracts per-seed
+        outputs from a frontier subgraph dispatch without shipping the
+        whole frontier's activations back to the caller.
+        """
+        rows = np.asarray(rows, dtype=np.int64)
+        inner = self.submit(graph_id, x, block=block, klass=klass,
+                            tenant=tenant)
+        outer: Future = Future()
+
+        def _chain(f: Future) -> None:
+            if f.cancelled():
+                outer.cancel()
+                return
+            exc = f.exception()
+            if exc is not None:
+                outer.set_exception(exc)
+                return
+            try:
+                outer.set_result(f.result()[rows])
+            except BaseException as e:  # noqa: BLE001 — surfaced via future
+                outer.set_exception(e)
+
+        inner.add_done_callback(_chain)
+        return outer
+
     def graph_ids(self) -> List[str]:
         return list(self._graphs)
 

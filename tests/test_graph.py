@@ -3,8 +3,8 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import (
-    CSRGraph, counting_sort_by_degree, csr_from_edges, degree_sort_csr,
-    degrees_from_rowptr, gcn_normalize,
+    CSRGraph, counting_sort_by_degree, csr_from_edges, csr_transpose,
+    degree_sort_csr, degrees_from_rowptr, gcn_normalize,
 )
 from conftest import make_powerlaw_csr
 
@@ -62,3 +62,38 @@ def test_csr_from_edges_roundtrip():
     for s, t in zip(src, dst):
         expect[s, t] += 1
     assert np.allclose(d, expect)
+
+
+# --------------------------------------------------------------- transpose
+def test_csr_transpose_dense_parity():
+    g = make_powerlaw_csr(n=60, seed=3)
+    t = csr_transpose(g)
+    t.validate()
+    assert np.array_equal(t.to_dense(), g.to_dense().T)
+
+
+def test_csr_transpose_rectangular_and_values():
+    dst = np.array([1, 4, 0, 4])
+    vals = np.array([1.5, -2.0, 0.25, 7.0], dtype=np.float32)
+    g = CSRGraph(np.array([0, 2, 2, 3, 4]), dst.astype(np.int64),
+                 vals, n_cols=5)
+    t = csr_transpose(g)
+    assert t.n_rows == 5 and t.n_cols == 4
+    assert np.array_equal(t.to_dense(), g.to_dense().T)
+
+
+def test_csr_transpose_within_row_source_order():
+    # transposed rows list sources ASCENDING (row-major scan is stable)
+    g = make_powerlaw_csr(n=80, seed=9)
+    t = csr_transpose(g)
+    for r in range(t.n_rows):
+        lo, hi = t.rowptr[r], t.rowptr[r + 1]
+        assert np.all(np.diff(t.colidx[lo:hi]) >= 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 200), seed=st.integers(0, 999))
+def test_csr_transpose_involution(n, seed):
+    g = make_powerlaw_csr(n=n, seed=seed)
+    tt = csr_transpose(csr_transpose(g))
+    assert np.array_equal(tt.to_dense(), g.to_dense())

@@ -1,0 +1,369 @@
+"""SamplingService end to end: sampled inference through the serving path.
+
+The ISSUE-9 acceptance surface: a 2-layer GCN over full-fanout sampled
+frontiers matches the full-graph reference BIT-FOR-BIT on both kernel
+backends; recurring frontiers amortize through the frontier LRU and the
+engine's plan cache (content-derived subgraph ids); store deltas either
+ride the PR-7 ``mutate()`` repair path into the cached frontier plans or
+drop the affected frontiers — never serving stale ones; and the
+cross-partition frontier exchange works over the REAL peer data plane
+(two subprocesses at the bottom of the file).
+"""
+import os
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.graph import csr_from_edges
+from repro.core.plan_repair import EdgeDelta
+from repro.distributed.multihost import run_cpu_fleet
+from repro.models.gcn import init_gcn
+from repro.sampling import GraphStore, SamplingService
+from repro.serve import GraphServeEngine
+
+BACKENDS = ["blocked", "pallas"]
+
+
+def _simple_graph(n=80, seed=0, m=500):
+    """Deduplicated random digraph (no parallel edges, so delta policies
+    and dense comparisons are unambiguous)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    eid = np.unique(src * n + dst)
+    return csr_from_edges(eid // n, eid % n, n)
+
+
+def _reference_gcn(engine, gid, x, params):
+    """Full-graph forward pass with the exact layer arithmetic the
+    service mirrors (h = aggr(h @ W) + b, relu between layers)."""
+    h = jax.numpy.asarray(x)
+    for i, p in enumerate(params):
+        agg = engine.submit(gid, jax.numpy.dot(h, p["w"])).result()
+        h = agg + p["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return np.asarray(h)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_two_layer_gcn_full_fanout_bit_exact(backend):
+    n = 90
+    store = GraphStore.build(_simple_graph(n, seed=0), normalize=True)
+    engine = GraphServeEngine(backend=backend)
+    try:
+        engine.register_graph("full", store.in_adj)
+        svc = SamplingService(engine, store, fanouts=[None, None],
+                              store=store)
+        x = np.random.default_rng(1).normal(size=(n, 12)).astype(np.float32)
+        params = init_gcn(jax.random.PRNGKey(0), [12, 16, 5])
+        ref = _reference_gcn(engine, "full", x, params)
+        seeds = np.array([7, 3, 55, 20])   # deliberately unsorted
+        out = svc.infer(seeds, x, params)
+        assert out.shape == (4, 5)
+        assert np.array_equal(out, ref[seeds])   # bit-for-bit
+    finally:
+        engine.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_k_hop_aggregate_full_fanout_bit_exact(backend):
+    n = 70
+    store = GraphStore.build(_simple_graph(n, seed=2), normalize=True)
+    engine = GraphServeEngine(backend=backend)
+    try:
+        engine.register_graph("full", store.in_adj)
+        svc = SamplingService(engine, store, fanouts=[None, None],
+                              store=store)
+        x = np.random.default_rng(3).normal(size=(n, 8)).astype(np.float32)
+        a1 = np.asarray(engine.submit("full", x).result())
+        a2 = np.asarray(engine.submit("full", a1).result())
+        seeds = np.array([1, 66, 30])
+        assert np.array_equal(svc.aggregate(seeds, x), a2[seeds])
+    finally:
+        engine.close()
+
+
+def test_recurring_frontier_amortizes_plans():
+    n = 60
+    store = GraphStore.build(_simple_graph(n, seed=4), normalize=True)
+    engine = GraphServeEngine(backend="blocked")
+    try:
+        svc = SamplingService(engine, store, fanouts=[2, 2], store=store)
+        x = np.random.default_rng(0).normal(size=(n, 4)).astype(np.float32)
+        seeds = np.array([5, 9, 33])
+        svc.aggregate(seeds, x)
+        size_after_first = engine.stats()["cache_size"]
+        # same seed SET in a different order: frontier LRU hit, no
+        # sampling, no registration, no new plans
+        svc.aggregate(np.array([33, 5, 9]), x)
+        st = svc.stats()
+        assert st["frontier_hits"] == 1 and st["frontier_misses"] == 1
+        assert engine.stats()["cache_size"] == size_after_first
+        # a SECOND service (fresh LRU, same engine): content-derived ids
+        # make its registrations plan-cache hits, not rebuilds
+        builds_before = engine.stats()["cache_misses"]
+        svc2 = SamplingService(engine, store, fanouts=[2, 2], store=store)
+        svc2.aggregate(seeds, x)
+        assert engine.stats()["cache_misses"] == builds_before
+    finally:
+        engine.close()
+
+
+def test_submit_gather_epilogue():
+    n = 40
+    g = GraphStore.build(_simple_graph(n, seed=5), normalize=True).in_adj
+    engine = GraphServeEngine(backend="blocked")
+    try:
+        gid = engine.register_subgraph(g, prefix="sub")
+        assert gid.startswith("sub:")
+        # idempotent: same content, same id, no duplicate binding
+        assert engine.register_subgraph(g, prefix="sub") == gid
+        x = np.random.default_rng(1).normal(size=(n, 6)).astype(np.float32)
+        rows = np.array([3, 0, 17])
+        full = np.asarray(engine.submit(gid, x).result())
+        gathered = np.asarray(engine.submit_gather(gid, x, rows).result())
+        assert np.array_equal(gathered, full[rows])
+    finally:
+        engine.close()
+
+
+def test_unregister_graph_drops_binding():
+    n = 30
+    g = GraphStore.build(_simple_graph(n, seed=6), normalize=True).in_adj
+    engine = GraphServeEngine(backend="blocked")
+    try:
+        gid = engine.register_subgraph(g)
+        x = np.zeros((n, 2), np.float32)
+        engine.submit(gid, x).result()
+        assert engine.unregister_graph(gid)
+        assert gid not in engine.graph_ids()
+        assert not engine.unregister_graph(gid)   # second call: no-op
+        with pytest.raises(KeyError):
+            engine.submit(gid, x)
+        # re-registration re-binds (plan may still be cached)
+        assert engine.register_subgraph(g) == gid
+        engine.submit(gid, x).result()
+    finally:
+        engine.close()
+
+
+def test_frontier_lru_eviction_unregisters():
+    n = 60
+    store = GraphStore.build(_simple_graph(n, seed=7), normalize=True)
+    engine = GraphServeEngine(backend="blocked")
+    try:
+        svc = SamplingService(engine, store, fanouts=[None],
+                              max_cached_frontiers=1, store=store)
+        x = np.zeros((n, 2), np.float32)
+        svc.aggregate(np.array([1, 2]), x)
+        gids_first = list(svc._cache.values())[0]["gids"]
+        svc.aggregate(np.array([40, 41]), x)
+        st = svc.stats()
+        assert st["frontiers_evicted"] == 1 and st["frontiers_cached"] == 1
+        for gid in gids_first:
+            assert gid not in engine.graph_ids()
+    finally:
+        engine.close()
+
+
+# ------------------------------------------------------------ invalidation
+def _frontier_edge(store, svc, seeds):
+    """(frontier, one in-edge (u -> v) with v a seed) for delta tests."""
+    f = svc.frontier_for(seeds)
+    v = int(f.layers[0][0])
+    a = store.in_adj
+    lo, hi = int(a.rowptr[v]), int(a.rowptr[v + 1])
+    assert hi > lo, "test graph left the first seed with no in-edges"
+    return f, int(a.colidx[lo]), v
+
+
+def test_delta_rides_mutate_path_and_stays_exact():
+    """Full-fanout frontier + expressible delta: the cached plans repair
+    through engine.mutate() (no resample) and keep serving exactly."""
+    n = 80
+    store = GraphStore.build(_simple_graph(n, seed=8))   # unnormalized
+    engine = GraphServeEngine(backend="blocked")
+    try:
+        svc = SamplingService(engine, store, fanouts=[None, None],
+                              store=store)
+        x = np.random.default_rng(2).normal(size=(n, 5)).astype(np.float32)
+        seeds = np.array([4, 11, 62])
+        svc.aggregate(seeds, x)
+        f, u, v = _frontier_edge(store, svc, seeds)
+        # delete an existing in-edge of a seed; insert a fresh edge whose
+        # endpoints both already sit in the frontier's layers
+        w = int(f.layers[1][-1])
+        dense = store.out_adj.to_dense()
+        ins = [(w, v)] if dense[w, v] == 0 else []
+        mut_before = engine.stats()["mutations_applied"]
+        store.apply_delta(EdgeDelta(
+            insert_src=[e[0] for e in ins], insert_dst=[e[1] for e in ins],
+            insert_val=[1.0] * len(ins),
+            delete_src=[u], delete_dst=[v]))
+        st = svc.stats()
+        assert st["frontier_mutations"] >= 1
+        assert st["frontiers_invalidated"] == 0
+        assert engine.stats()["mutations_applied"] > mut_before
+        # cached entry survives AND serves the post-delta graph exactly
+        engine.register_graph("ref", store.in_adj)
+        a1 = np.asarray(engine.submit("ref", x).result())
+        a2 = np.asarray(engine.submit("ref", a1).result())
+        out = svc.aggregate(seeds, x)
+        assert svc.stats()["frontier_hits"] >= 1
+        assert np.array_equal(out, a2[seeds])
+    finally:
+        engine.close()
+
+
+def test_unexpressible_insert_invalidates_and_resamples():
+    n = 80
+    store = GraphStore.build(_simple_graph(n, seed=9))
+    engine = GraphServeEngine(backend="blocked")
+    try:
+        svc = SamplingService(engine, store, fanouts=[None, None],
+                              store=store)
+        x = np.random.default_rng(3).normal(size=(n, 4)).astype(np.float32)
+        seeds = np.array([2, 3])
+        svc.aggregate(seeds, x)
+        f = svc.frontier_for(seeds)
+        v = int(f.layers[0][0])
+        outside = np.setdiff1d(np.arange(n), f.layers[1])
+        assert len(outside), "frontier swallowed the whole graph; shrink it"
+        w = int(outside[0])   # insert from OUTSIDE the frontier: no local
+        #                       coordinates for w -> must resample
+        store.apply_delta(EdgeDelta(insert_src=[w], insert_dst=[v],
+                                    insert_val=[1.0],
+                                    on_duplicate="replace"))
+        st = svc.stats()
+        assert st["frontiers_invalidated"] == 1
+        assert st["frontier_mutations"] == 0
+        # next query resamples against the post-delta store and is exact
+        engine.register_graph("ref", store.in_adj)
+        a1 = np.asarray(engine.submit("ref", x).result())
+        a2 = np.asarray(engine.submit("ref", a1).result())
+        assert np.array_equal(svc.aggregate(seeds, x), a2[seeds])
+        assert svc.stats()["frontier_misses"] == 2
+    finally:
+        engine.close()
+
+
+def test_capped_fanout_delta_invalidates():
+    n = 60
+    store = GraphStore.build(_simple_graph(n, seed=10))
+    engine = GraphServeEngine(backend="blocked")
+    try:
+        svc = SamplingService(engine, store, fanouts=[2, 2], store=store)
+        x = np.zeros((n, 2), np.float32)
+        seeds = np.array([1, 5])
+        svc.aggregate(seeds, x)
+        _, u, v = _frontier_edge(store, svc, seeds)
+        store.apply_delta(EdgeDelta(delete_src=[u], delete_dst=[v]))
+        st = svc.stats()
+        assert st["frontiers_invalidated"] == 1
+        assert st["frontier_mutations"] == 0
+    finally:
+        engine.close()
+
+
+def test_unrelated_delta_leaves_frontiers_cached():
+    n = 80
+    store = GraphStore.build(_simple_graph(n, seed=11))
+    engine = GraphServeEngine(backend="blocked")
+    try:
+        svc = SamplingService(engine, store, fanouts=[None], store=store)
+        x = np.zeros((n, 2), np.float32)
+        seeds = np.array([0, 1])
+        svc.aggregate(seeds, x)
+        f = svc.frontier_for(seeds)
+        outside = np.setdiff1d(np.arange(n), f.layers[0])
+        v = int(outside[-1])   # delta touches rows OUTSIDE the receptive
+        u = int(outside[0])    # field: nothing to do
+        store.apply_delta(EdgeDelta(insert_src=[u], insert_dst=[v],
+                                    insert_val=[1.0],
+                                    on_duplicate="replace"))
+        st = svc.stats()
+        assert st["frontiers_invalidated"] == 0
+        assert st["frontier_mutations"] == 0
+        assert st["frontiers_cached"] == 1
+    finally:
+        engine.close()
+
+
+# --------------------------------------------------- cross-partition (real)
+_EXCHANGE_WORKER = textwrap.dedent("""
+    import json, os, threading
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    from repro.data.graphs import make_power_law_graph
+    from repro.distributed.multihost import (
+        FrontierExchange, PeerClient, PeerServer, peer_ports,
+    )
+    from repro.sampling import (
+        GraphStore, PartitionedStoreClient, sample_frontier,
+    )
+
+    rank = int(os.environ["REPRO_MH_PID"])
+    nprocs = int(os.environ["REPRO_MH_NPROCS"])
+    ports = peer_ports()
+
+    # every rank derives the SAME graph deterministically, keeps its own
+    # shard for serving, and a monolithic copy as the parity reference
+    full = GraphStore.build(make_power_law_graph(400, 2400, seed=0),
+                            normalize=True)
+    shards = full.partition(nprocs)
+    bounds = [s.node_range[0] for s in shards] + [full.n_nodes]
+
+    server = PeerServer(ports[rank], process_index=rank, epoch=0,
+                        n_devices=1)
+    FrontierExchange.serve(server, shards[rank])
+    done = threading.Event()
+    server.register("peer-done", lambda _p: done.set())
+
+    peers = {r: PeerClient(("127.0.0.1", p), process_index=rank)
+             for r, p in ports.items() if r != rank}
+    exchange = FrontierExchange(peers)
+    client = PartitionedStoreClient(shards[rank], bounds,
+                                    exchange.remote_map(), rank)
+
+    # seeds straddling every partition boundary force remote hops
+    seeds = np.array([3, 197, 202, 396])
+    checks = []
+    for fanouts in ([None, None], [3, 3]):
+        fp = sample_frontier(client.sample_in_neighbors, seeds, fanouts,
+                             seed=7)
+        fm = sample_frontier(full.sample_in_neighbors, seeds, fanouts,
+                             seed=7)
+        checks.append(fp.content_key() == fm.content_key())
+
+    for peer in peers.values():
+        peer.request("peer-done", None)
+    assert done.wait(120), "peer never finished sampling"
+    for peer in peers.values():
+        peer.close()
+    server.close()
+    print(json.dumps({"rank": rank, "parity": all(checks),
+                      "remote_edges": int(client.remote_edges),
+                      "local_edges": int(client.local_edges),
+                      "failovers": exchange.failovers,
+                      "requests": exchange.requests}))
+""")
+
+
+def test_cross_partition_exchange_two_processes():
+    """REAL data plane: two subprocesses each own half the store; both
+    sample frontiers straddling the boundary via FrontierExchange and
+    must match the monolithic store bit-for-bit with zero failovers."""
+    repo_root = os.path.join(os.path.dirname(__file__), "..")
+    records = run_cpu_fleet(_EXCHANGE_WORKER, num_processes=2,
+                            n_local_devices=1, timeout_s=300.0,
+                            cwd=repo_root)
+    assert len(records) == 2
+    for rec in sorted(records, key=lambda r: r["rank"]):
+        assert rec["parity"], f"rank {rec['rank']} lost sampling parity"
+        assert rec["remote_edges"] > 0     # boundary hops actually crossed
+        assert rec["failovers"] == 0
+        assert rec["requests"] > 0
