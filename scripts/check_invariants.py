@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Run the project invariant analyzer (src/repro/statics) over the tree.
+
+Exit 0 when no unsuppressed findings; exit 1 otherwise.  CI runs this as
+the `invariants` job.
+
+Usage:
+    python scripts/check_invariants.py                  # default paths
+    python scripts/check_invariants.py src/repro/serve  # explicit paths
+    python scripts/check_invariants.py --rules lock     # one family
+    python scripts/check_invariants.py --list-rules
+    python scripts/check_invariants.py --json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.statics import ALL_RULES, RULE_FAMILIES, analyze_paths  # noqa: E402
+
+DEFAULT_PATHS = ["src/repro", "benchmarks", "scripts"]
+
+
+def _resolve_rules(spec: str | None) -> set[str] | None:
+    if spec is None:
+        return None
+    out: set[str] = set()
+    for token in spec.split(","):
+        token = token.strip()
+        if not token:
+            continue
+        if token in RULE_FAMILIES:
+            out.update(RULE_FAMILIES[token])
+        elif token in ALL_RULES:
+            out.add(token)
+        else:
+            sys.exit(f"unknown rule or family: {token!r} (see --list-rules)")
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to check (default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule names or families "
+                         f"({', '.join(RULE_FAMILIES)})")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for family, rules in RULE_FAMILIES.items():
+            print(f"{family}:")
+            for r in rules:
+                print(f"  {r}")
+        return 0
+
+    paths = args.paths or [str(REPO_ROOT / p) for p in DEFAULT_PATHS]
+    findings, n_files = analyze_paths(paths, rules=_resolve_rules(args.rules))
+
+    if args.as_json:
+        print(json.dumps(
+            [{"rule": f.rule, "path": f.path, "line": f.line, "message": f.message}
+             for f in findings],
+            indent=2,
+        ))
+    else:
+        for f in findings:
+            print(f.format())
+        label = "finding" if len(findings) == 1 else "findings"
+        print(f"checked {n_files} files: {len(findings)} {label}", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -93,7 +93,7 @@ class CheckpointManager:
         sh_leaves = (jax.tree_util.tree_leaves(shardings)
                      if shardings is not None else [None] * len(leaves))
         import ml_dtypes  # registered by jax; provides bfloat16 numpy dtype
-        for i, (leaf, sh) in enumerate(zip(leaves, sh_leaves)):
+        for i, (_leaf, sh) in enumerate(zip(leaves, sh_leaves)):
             a = data[f"a{i}"]
             want = manifest["dtypes"][i]
             a = a.astype(ml_dtypes.bfloat16 if want == "bfloat16" else want)

@@ -127,7 +127,7 @@ def make_accel_spmm(
         W = wp.num_warps
         ws_col = np.zeros((W, warp_ng), dtype=np.int32)
         ws_val = np.zeros((W, warp_ng), dtype=np.float32)
-        for i, (r, lo, ln) in enumerate(wp.meta):
+        for i, (_r, lo, ln) in enumerate(wp.meta):
             ws_col[i, :ln] = g.colidx[lo:lo + ln]
             ws_val[i, :ln] = g.values[lo:lo + ln]
         op.warp_slabs = {

@@ -106,7 +106,8 @@ class PlacementDirectory:
         self._replica_entries: Dict[object, List[Placement]] = {}
         self._slots: List[Tuple[int, int]] = []
         self._ring: Optional[ConsistentHashRing] = None
-        self._rebuild_ring_locked()
+        with self._lock:
+            self._rebuild_ring_locked()
         # versioned plan chains: graph_id -> (current plan key, version).
         # Publishing a newer version drops the OLD key's primary and every
         # replica, so no host can resolve a stale epoch through this

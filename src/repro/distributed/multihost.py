@@ -292,13 +292,13 @@ class PeerClient:
         delay = 0.05
         while True:
             try:
-                sock = socket.create_connection(self.address,
+                sock = socket.create_connection(self.address,  # statics: ignore[blocking-call-under-lock] -- the per-channel mutex intentionally serializes connect + one in-flight request; only forwarders block on it
                                                 timeout=self.timeout_s)
                 break
             except OSError:
                 if time.monotonic() >= deadline:
                     raise
-                time.sleep(delay)
+                time.sleep(delay)  # statics: ignore[blocking-call-under-lock] -- bounded connect backoff under the same per-channel mutex (see above)
                 delay = min(delay * 2, 0.5)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         _send_frame(sock, ("hello", {"process_index": self.process_index,

@@ -287,10 +287,12 @@ class FleetGraphEngine(GraphServeEngine):
             per_dev.setdefault(dev, []).append((gid, grp, plan))
             round_load[dev] = round_load.get(dev, 0) + len(grp)
 
+        with self._bind_lock:   # snapshot: gid -> current chained key
+            keys = {gid: self._keys[gid] for gid in order}
         for gid in order:
             plan = plans[gid]
             grp = groups[gid]
-            key = self._keys[gid]
+            key = keys[gid]
             devs: List[int] = []
             if self.replicas is not None:
                 # every request counts toward the rate estimate, whatever
@@ -750,7 +752,7 @@ class MultihostGraphEngine(FleetGraphEngine):
         recovered host's arcs again.
         """
         epochs: Dict[int, int] = {}
-        for rank, client in sorted(self.peers.items()):
+        for _rank, client in sorted(self.peers.items()):
             peer_rank, peer_epoch = client.handshake()
             epochs[peer_rank] = peer_epoch
             self.directory.update_host(HostInfo(
@@ -861,6 +863,8 @@ class MultihostGraphEngine(FleetGraphEngine):
         order, groups = self._group_by_graph(items)
         local: List[WorkItem] = []
         by_host: Dict[int, List[Tuple[str, List[WorkItem]]]] = {}
+        with self._bind_lock:   # snapshot: gid -> current chained key
+            keys = dict(self._keys)
         for gid in order:
             grp = groups[gid]
             if any(len(it.payload) > 2 for it in grp):
@@ -871,7 +875,7 @@ class MultihostGraphEngine(FleetGraphEngine):
                 continue              # data, never directory-placed
             # consult the full replica set: a plan replicated ONTO this
             # host serves locally even when another host owns the primary
-            reps = self.directory.replicas(self._keys[gid])
+            reps = self.directory.replicas(keys[gid])
             owner = reps[0]
             if (any(r.host == self.process_index for r in reps)
                     or owner.host not in self.peers):

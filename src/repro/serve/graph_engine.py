@@ -318,7 +318,8 @@ class GraphServeEngine:
         return outer
 
     def graph_ids(self) -> List[str]:
-        return list(self._graphs)
+        with self._bind_lock:
+            return list(self._graphs)
 
     def plan_for(self, graph_id: str) -> PartitionPlan:
         """Resolve a registered graph's plan WITHOUT rehashing its arrays —
@@ -362,10 +363,11 @@ class GraphServeEngine:
         thread and plan resolution (which can mean an O(n) rebuild after an
         eviction) happens on the flush thread where it belongs.
         """
-        g = self._graphs.get(graph_id)
-        if g is None:
-            raise KeyError(f"graph {graph_id!r} not registered "
-                           f"(known: {sorted(self._graphs)})")
+        with self._bind_lock:
+            g = self._graphs.get(graph_id)
+            if g is None:
+                raise KeyError(f"graph {graph_id!r} not registered "
+                               f"(known: {sorted(self._graphs)})")
         shape = tuple(getattr(x, "shape", ()))
         if len(shape) != 2 or shape[0] != g.n_cols:
             raise ValueError(
@@ -615,7 +617,7 @@ class GraphServeEngine:
         plans: List[PartitionPlan] = []
         xs: List[jax.Array] = []
         col_splits: List[List[int]] = []
-        for gid, grp, plan in batch:
+        for _gid, grp, plan in batch:
             feats = [jnp.asarray(it.payload[1], dtype=jnp.float32)
                      for it in grp]
             plans.append(plan)
@@ -665,7 +667,7 @@ class GraphServeEngine:
         answers: List[Tuple[WorkItem, jax.Array]] = []
         n_req = n_rows = n_vals = 0
         wait_s = 0.0
-        for (gid, grp, plan), out, widths in zip(batch, outs, col_splits):
+        for (_gid, grp, plan), out, widths in zip(batch, outs, col_splits):
             out = out[plan.inv_perm]          # back to original row order
             sliced, wait = self._slice_answers(grp, widths, out, now)
             answers.extend(sliced)
@@ -729,7 +731,7 @@ class GraphServeEngine:
             self.tuner.observe(gid, len(grp))
         if getattr(self, "directory", None) is not None:
             return      # multihost: directory-owned keys don't tune yet
-        for (gid, grp, plan), x in zip(batch, xs):
+        for (gid, _grp, plan), x in zip(batch, xs):
             cand = self.tuner.next_shadow(gid, plan.config)
             if cand is None:
                 continue

@@ -343,7 +343,7 @@ class BatchScheduler:
     def _qsize_locked(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
-    def _class_of(self, klass: str) -> "deque[WorkItem]":
+    def _class_of_locked(self, klass: str) -> "deque[WorkItem]":
         q = self._queues.get(klass)
         if q is None:
             raise KeyError(
@@ -461,7 +461,7 @@ class BatchScheduler:
         """
         deadline = None if timeout is None else time.perf_counter() + timeout
         with self._cond:
-            self._class_of(klass)
+            self._class_of_locked(klass)
             self._ensure_started_locked()
             while self._admission_full_locked(klass):
                 if not block:
@@ -516,7 +516,7 @@ class BatchScheduler:
         deadline = None if timeout is None else time.perf_counter() + timeout
         with self._cond:
             for k in set(klasses):
-                self._class_of(k)
+                self._class_of_locked(k)
             self._ensure_started_locked()
             need = len(payloads)
             while (self._qsize_locked() + need > self.max_queue

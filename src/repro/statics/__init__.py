@@ -1,0 +1,28 @@
+"""AST-based project invariant analyzer + runtime lock-order witness.
+
+Static side (`analyze_paths`): lock-discipline, Pallas-kernel, and
+future-settlement rules over the tree — see `scripts/check_invariants.py`
+for the CLI that gates CI.  Runtime side (`witness`): an opt-in
+instrumented-lock acquisition-order graph that fails a test run on a
+cycle (enable with REPRO_LOCK_WITNESS=1).
+"""
+
+from .analyzer import ALL_RULES, RULE_FAMILIES, analyze_paths, collect_py_files
+from .findings import Finding, apply_suppressions, parse_suppressions
+from .lock_rules import DEFAULT_GUARDED_ATTRS
+from .witness import InstrumentedLock, LockWitness, install, uninstall
+
+__all__ = [
+    "ALL_RULES",
+    "RULE_FAMILIES",
+    "analyze_paths",
+    "collect_py_files",
+    "Finding",
+    "apply_suppressions",
+    "parse_suppressions",
+    "DEFAULT_GUARDED_ATTRS",
+    "InstrumentedLock",
+    "LockWitness",
+    "install",
+    "uninstall",
+]

@@ -1,0 +1,395 @@
+"""Pallas kernel lint rules.
+
+Applied only to files that import ``jax.experimental.pallas``.  These
+turn trace-time lowering crashes into lint errors:
+
+* ``pallas-static-args`` — a jit-wrapped function whose body calls
+  ``pl.pallas_call`` must list every non-array parameter (int/str/bool
+  annotation or literal default) in ``static_argnames``; a traced scalar
+  there becomes an opaque tracer inside grid/BlockSpec math.
+* ``pallas-traced-branch`` — kernel bodies (functions taking ``*_ref``
+  parameters) must not branch with Python ``if``/``while`` on traced
+  values (refs, ``pl.program_id``, or anything derived from them); use
+  ``pl.when`` / ``jnp.where``.
+* ``pallas-closure-numpy`` — kernel bodies must not construct or close
+  over host numpy arrays; they get baked into the jaxpr as constants
+  (silent recompile per distinct array, or a lowering error).
+* ``pallas-tile-divisibility`` — where both the BlockSpec tile shape and
+  the ``out_shape`` dims are integer literals, the tile must divide the
+  padded dim exactly.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .findings import Finding
+
+_NONARRAY_ANNOTATIONS = {"int", "str", "bool"}
+_NP_ARRAY_BUILDERS = {
+    "array",
+    "zeros",
+    "ones",
+    "full",
+    "arange",
+    "empty",
+    "asarray",
+    "linspace",
+    "eye",
+}
+
+
+def _imports_pallas(tree: ast.Module) -> tuple[bool, str, set[str]]:
+    """Returns (uses_pallas, pallas_alias, numpy_aliases)."""
+    uses = False
+    pl_alias = "pl"
+    np_aliases: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if "pallas" in a.name:
+                    uses = True
+                    if a.asname:
+                        pl_alias = a.asname
+                if a.name == "numpy":
+                    np_aliases.add(a.asname or "numpy")
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if "pallas" in mod:
+                uses = True
+                for a in node.names:
+                    if a.name == "pallas" or "pallas" in a.name:
+                        pl_alias = a.asname or a.name
+            if mod == "jax.experimental" and any(a.name == "pallas" for a in node.names):
+                uses = True
+                for a in node.names:
+                    if a.name == "pallas":
+                        pl_alias = a.asname or "pallas"
+    return uses, pl_alias, np_aliases
+
+
+def _calls_pallas_call(func: ast.FunctionDef, pl_alias: str) -> bool:
+    for node in ast.walk(func):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "pallas_call":
+                return True
+            if isinstance(f, ast.Name) and f.id == "pallas_call":
+                return True
+    return False
+
+
+def _static_argnames_from_decorators(func: ast.FunctionDef) -> tuple[bool, set[str]]:
+    """Returns (is_jit_wrapped, static names). Handles @functools.partial(jax.jit,
+    static_argnames=(...)) and @jax.jit(static_argnames=(...))."""
+    for dec in func.decorator_list:
+        if not isinstance(dec, ast.Call):
+            # bare @jax.jit / @jit: jit-wrapped with no statics
+            if isinstance(dec, ast.Attribute) and dec.attr == "jit":
+                return True, set()
+            if isinstance(dec, ast.Name) and dec.id == "jit":
+                return True, set()
+            continue
+        target = dec.func
+        is_partial = (
+            isinstance(target, ast.Attribute) and target.attr == "partial"
+        ) or (isinstance(target, ast.Name) and target.id == "partial")
+        is_jit = (isinstance(target, ast.Attribute) and target.attr == "jit") or (
+            isinstance(target, ast.Name) and target.id == "jit"
+        )
+        mentions_jit = any(
+            (isinstance(a, ast.Attribute) and a.attr == "jit")
+            or (isinstance(a, ast.Name) and a.id == "jit")
+            for a in dec.args
+        )
+        if not (is_jit or (is_partial and mentions_jit)):
+            continue
+        names: set[str] = set()
+        for kw in dec.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                for sub in ast.walk(kw.value):
+                    if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                        names.add(sub.value)
+        return True, names
+    return False, set()
+
+
+def _nonarray_params(func: ast.FunctionDef) -> list[tuple[str, int, str]]:
+    """Params that are statically non-array: (name, line, why)."""
+    out = []
+    args = func.args
+    all_args = list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+    defaults: dict[str, ast.expr] = {}
+    pos = list(args.posonlyargs) + list(args.args)
+    for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+        defaults[a.arg] = d
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if d is not None:
+            defaults[a.arg] = d
+    for a in all_args:
+        if a.arg in ("self", "cls"):
+            continue
+        ann = a.annotation
+        if isinstance(ann, ast.Name) and ann.id in _NONARRAY_ANNOTATIONS:
+            out.append((a.arg, a.lineno, f"annotated {ann.id}"))
+            continue
+        d = defaults.get(a.arg)
+        if (
+            isinstance(d, ast.Constant)
+            and isinstance(d.value, (int, str, bool))
+            and not isinstance(d.value, float)
+            and d.value is not None
+        ):
+            out.append((a.arg, a.lineno, f"default {d.value!r}"))
+    return out
+
+
+def _check_static_args(path: str, func: ast.FunctionDef, pl_alias: str) -> list[Finding]:
+    is_jit, statics = _static_argnames_from_decorators(func)
+    if not is_jit:
+        return []
+    findings = []
+    for name, line, why in _nonarray_params(func):
+        if name not in statics:
+            findings.append(
+                Finding(
+                    rule="pallas-static-args",
+                    path=path,
+                    line=line,
+                    message=(
+                        f"parameter '{name}' of jit-wrapped pallas function "
+                        f"{func.name}() is non-array ({why}) but missing from "
+                        "static_argnames; it would trace as a dynamic value"
+                    ),
+                )
+            )
+    return findings
+
+
+# -- kernel-body rules -----------------------------------------------------
+
+
+def _is_kernel_body(func: ast.FunctionDef) -> bool:
+    params = [a.arg for a in func.args.posonlyargs + func.args.args]
+    return any(p.endswith("_ref") for p in params)
+
+
+def _taint_set(func: ast.FunctionDef, pl_alias: str) -> set[str]:
+    tainted = {
+        a.arg
+        for a in func.args.posonlyargs + func.args.args + func.args.kwonlyargs
+        if a.arg.endswith("_ref")
+    }
+
+    def expr_tainted(expr: ast.expr) -> bool:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and node.id in tainted:
+                return True
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr == "program_id":
+                    return True
+        return False
+
+    # propagate through simple assignments, in order, twice (cheap fixpoint
+    # for the straight-line bodies kernels actually have)
+    for _ in range(2):
+        for node in ast.walk(func):
+            if isinstance(node, ast.Assign) and expr_tainted(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        tainted.add(t.id)
+            elif isinstance(node, ast.AugAssign) and isinstance(node.target, ast.Name):
+                if expr_tainted(node.value) or node.target.id in tainted:
+                    tainted.add(node.target.id)
+    return tainted
+
+
+def _check_kernel_body(
+    path: str, func: ast.FunctionDef, pl_alias: str, np_aliases: set[str]
+) -> list[Finding]:
+    findings = []
+    tainted = _taint_set(func, pl_alias)
+
+    def expr_refs_taint(expr: ast.expr) -> str | None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and node.id in tainted:
+                return node.id
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr == "program_id":
+                    return "program_id(...)"
+        return None
+
+    for node in ast.walk(func):
+        if isinstance(node, (ast.If, ast.While)):
+            hit = expr_refs_taint(node.test)
+            if hit:
+                kind = "if" if isinstance(node, ast.If) else "while"
+                findings.append(
+                    Finding(
+                        rule="pallas-traced-branch",
+                        path=path,
+                        line=node.lineno,
+                        message=(
+                            f"Python '{kind}' on traced value '{hit}' inside kernel "
+                            f"{func.name}(); traced values are abstract at trace "
+                            "time — use pl.when(...) or jnp.where(...)"
+                        ),
+                    )
+                )
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if (
+                isinstance(f, ast.Attribute)
+                and isinstance(f.value, ast.Name)
+                and f.value.id in np_aliases
+                and f.attr in _NP_ARRAY_BUILDERS
+            ):
+                findings.append(
+                    Finding(
+                        rule="pallas-closure-numpy",
+                        path=path,
+                        line=node.lineno,
+                        message=(
+                            f"host numpy array built inside kernel {func.name}() "
+                            f"({f.value.id}.{f.attr}); it becomes a baked-in jaxpr "
+                            "constant — pass it as a kernel operand instead"
+                        ),
+                    )
+                )
+    return findings
+
+
+def _check_module_np_closures(
+    path: str, tree: ast.Module, np_aliases: set[str]
+) -> list[Finding]:
+    """Kernel bodies referencing module-level numpy-array constants."""
+    module_arrays: dict[str, int] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            f = node.value.func
+            if (
+                isinstance(f, ast.Attribute)
+                and isinstance(f.value, ast.Name)
+                and f.value.id in np_aliases
+                and f.attr in _NP_ARRAY_BUILDERS
+            ):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        module_arrays[t.id] = node.lineno
+    if not module_arrays:
+        return []
+    findings = []
+    for func in ast.walk(tree):
+        if not isinstance(func, ast.FunctionDef) or not _is_kernel_body(func):
+            continue
+        local = {
+            a.arg
+            for a in func.args.posonlyargs + func.args.args + func.args.kwonlyargs
+        }
+        for node in ast.walk(func):
+            if (
+                isinstance(node, ast.Name)
+                and isinstance(node.ctx, ast.Load)
+                and node.id in module_arrays
+                and node.id not in local
+            ):
+                findings.append(
+                    Finding(
+                        rule="pallas-closure-numpy",
+                        path=path,
+                        line=node.lineno,
+                        message=(
+                            f"kernel {func.name}() closes over module-level numpy "
+                            f"array '{node.id}' (defined line "
+                            f"{module_arrays[node.id]}); pass it as an operand"
+                        ),
+                    )
+                )
+    return findings
+
+
+# -- tile divisibility -----------------------------------------------------
+
+
+def _literal_int_tuple(expr: ast.expr) -> list[int] | None:
+    if not isinstance(expr, ast.Tuple):
+        return None
+    out = []
+    for el in expr.elts:
+        if isinstance(el, ast.Constant) and isinstance(el.value, int):
+            out.append(el.value)
+        else:
+            return None
+    return out
+
+
+def _check_tile_divisibility(path: str, tree: ast.Module) -> list[Finding]:
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if not (
+            (isinstance(f, ast.Attribute) and f.attr == "pallas_call")
+            or (isinstance(f, ast.Name) and f.id == "pallas_call")
+        ):
+            continue
+        out_dims: list[int] | None = None
+        tile_dims_list: list[tuple[list[int], int]] = []
+        for kw in node.keywords:
+            if kw.arg == "out_shape":
+                # jax.ShapeDtypeStruct((literal, dims), dtype)
+                v = kw.value
+                if isinstance(v, ast.Call) and v.args:
+                    out_dims = _literal_int_tuple(v.args[0])
+            elif kw.arg == "out_specs":
+                for sub in ast.walk(kw.value):
+                    if isinstance(sub, ast.Call):
+                        sf = sub.func
+                        if (
+                            isinstance(sf, ast.Attribute) and sf.attr == "BlockSpec"
+                        ) or (isinstance(sf, ast.Name) and sf.id == "BlockSpec"):
+                            if sub.args:
+                                dims = _literal_int_tuple(sub.args[0])
+                                if dims is not None:
+                                    tile_dims_list.append((dims, sub.lineno))
+        if out_dims is None:
+            continue
+        for tile_dims, line in tile_dims_list:
+            if len(tile_dims) != len(out_dims):
+                continue
+            for tile, dim in zip(tile_dims, out_dims):
+                if tile > 0 and dim % tile != 0:
+                    findings.append(
+                        Finding(
+                            rule="pallas-tile-divisibility",
+                            path=path,
+                            line=line,
+                            message=(
+                                f"BlockSpec tile {tuple(tile_dims)} does not divide "
+                                f"out_shape {tuple(out_dims)} ({dim} % {tile} != 0); "
+                                "pad the dim or shrink the tile"
+                            ),
+                        )
+                    )
+                    break
+    return findings
+
+
+def check(path: str, tree: ast.Module) -> list[Finding]:
+    uses, pl_alias, np_aliases = _imports_pallas(tree)
+    if not uses:
+        return []
+    findings: list[Finding] = []
+    for func in ast.walk(tree):
+        if not isinstance(func, ast.FunctionDef):
+            continue
+        if _calls_pallas_call(func, pl_alias):
+            findings.extend(_check_static_args(path, func, pl_alias))
+        if _is_kernel_body(func):
+            findings.extend(_check_kernel_body(path, func, pl_alias, np_aliases))
+    findings.extend(_check_module_np_closures(path, tree, np_aliases))
+    findings.extend(_check_tile_divisibility(path, tree))
+    return findings

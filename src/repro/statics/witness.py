@@ -1,0 +1,230 @@
+"""Opt-in runtime lock-order witness (lockdep-lite).
+
+The static rules are lexical; they cannot see the ORDER in which two
+locks are taken across threads.  This witness can: when installed it
+wraps every ``threading.Lock`` / ``RLock`` / ``Condition`` created by
+``repro.*`` modules, records a global acquisition-order graph (edge
+``A -> B`` whenever a thread acquires B while holding A), and flags a
+cycle in that graph as a potential deadlock — even on runs that never
+actually deadlock.
+
+Enabled from tests/conftest.py when ``REPRO_LOCK_WITNESS=1``; nothing is
+patched otherwise, so the default test path has zero overhead.
+
+Known approximation: nodes are lock *instances* labelled by creation
+site.  Per-instance tracking avoids false cycles between two unrelated
+instances of the same class, at the cost of missing A1/B1-vs-B2/A2
+inversions across instance pairs.
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+_REAL_CONDITION = threading.Condition
+
+
+class LockWitness:
+    """Acquisition-order graph + per-thread held-lock stacks."""
+
+    def __init__(self):
+        self._meta = _REAL_LOCK()
+        self._edges: dict[int, set[int]] = {}
+        self._labels: dict[int, str] = {}
+        self._tls = threading.local()
+        self.cycles: list[tuple[str, ...]] = []
+
+    # -- bookkeeping -------------------------------------------------------
+
+    def _stack(self) -> list[int]:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = []
+            self._tls.stack = st
+        return st
+
+    def register(self, node: int, label: str) -> None:
+        with self._meta:
+            self._labels[node] = label
+
+    def label(self, node: int) -> str:
+        return self._labels.get(node, hex(node))
+
+    # -- events ------------------------------------------------------------
+
+    def before_acquire(self, node: int) -> None:
+        st = self._stack()
+        if node in st:
+            return  # reentrant re-acquire: no new ordering information
+        held = list(dict.fromkeys(st))
+        if not held:
+            return
+        with self._meta:
+            for h in held:
+                succ = self._edges.setdefault(h, set())
+                if node in succ:
+                    continue
+                path = self._find_path(node, h)
+                if path is not None:
+                    cyc = tuple(self.label(n) for n in [h, *path])
+                    self.cycles.append(cyc)
+                succ.add(node)
+
+    def after_acquire(self, node: int) -> None:
+        self._stack().append(node)
+
+    def on_release(self, node: int) -> None:
+        st = self._stack()
+        for i in range(len(st) - 1, -1, -1):
+            if st[i] == node:
+                del st[i]
+                return
+
+    def _find_path(self, src: int, dst: int) -> list[int] | None:
+        """DFS path src -> dst over the recorded edges (meta lock held)."""
+        seen = {src}
+        stack: list[tuple[int, list[int]]] = [(src, [src])]
+        while stack:
+            n, path = stack.pop()
+            if n == dst:
+                return path
+            for m in self._edges.get(n, ()):
+                if m not in seen:
+                    seen.add(m)
+                    stack.append((m, path + [m]))
+        return None
+
+    # -- reporting ---------------------------------------------------------
+
+    def assert_no_cycles(self) -> None:
+        if self.cycles:
+            lines = "\n".join("  " + " -> ".join(c) for c in self.cycles)
+            raise AssertionError(
+                f"lock-order witness found {len(self.cycles)} acquisition-order "
+                f"cycle(s) — potential deadlock:\n{lines}"
+            )
+
+
+class InstrumentedLock:
+    """Wraps a real Lock/RLock, reporting events to a LockWitness.
+
+    Also implements the private Condition protocol (``_release_save`` /
+    ``_acquire_restore`` / ``_is_owned``) so ``threading.Condition`` built
+    on an instrumented RLock keeps full reentrancy semantics, and
+    ``cond.wait()`` correctly pops/pushes the held stack around the
+    blocking window.
+    """
+
+    def __init__(self, inner, witness: LockWitness, label: str):
+        self._inner = inner
+        self._witness = witness
+        self._node = id(self)
+        witness.register(self._node, label)
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        self._witness.before_acquire(self._node)
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            self._witness.after_acquire(self._node)
+        return ok
+
+    def release(self) -> None:
+        self._inner.release()
+        self._witness.on_release(self._node)
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.release()
+        return False
+
+    def locked(self) -> bool:
+        fn = getattr(self._inner, "locked", None)
+        return bool(fn()) if fn is not None else False
+
+    # Condition protocol -----------------------------------------------------
+
+    def _release_save(self):
+        fn = getattr(self._inner, "_release_save", None)
+        state = fn() if fn is not None else self._inner.release()
+        self._witness.on_release(self._node)
+        return state
+
+    def _acquire_restore(self, state) -> None:
+        self._witness.before_acquire(self._node)
+        fn = getattr(self._inner, "_acquire_restore", None)
+        if fn is not None:
+            fn(state)
+        else:
+            self._inner.acquire()
+        self._witness.after_acquire(self._node)
+
+    def _is_owned(self) -> bool:
+        fn = getattr(self._inner, "_is_owned", None)
+        if fn is not None:
+            return fn()
+        return self._node in self._witness._stack()
+
+
+_active: LockWitness | None = None
+
+
+def current() -> LockWitness | None:
+    return _active
+
+
+def install(module_prefix: str = "repro.") -> LockWitness:
+    """Patch the threading lock factories for `repro.*` callers.
+
+    Locks created by other modules (threading internals, jax, pytest)
+    pass through untouched; the caller module is read off the stack
+    frame at construction time.
+    """
+    global _active
+    if _active is not None:
+        return _active
+    witness = LockWitness()
+
+    def _caller():
+        f = sys._getframe(2)
+        mod = f.f_globals.get("__name__", "")
+        return mod, f.f_lineno
+
+    def make_lock():
+        mod, line = _caller()
+        if not mod.startswith(module_prefix):
+            return _REAL_LOCK()
+        return InstrumentedLock(_REAL_LOCK(), witness, f"{mod}:{line}")
+
+    def make_rlock():
+        mod, line = _caller()
+        if not mod.startswith(module_prefix):
+            return _REAL_RLOCK()
+        return InstrumentedLock(_REAL_RLOCK(), witness, f"{mod}:{line}")
+
+    def make_condition(lock=None):
+        mod, line = _caller()
+        if lock is None and mod.startswith(module_prefix):
+            lock = InstrumentedLock(_REAL_RLOCK(), witness, f"{mod}:{line} (cond)")
+        if lock is None:
+            return _REAL_CONDITION()
+        return _REAL_CONDITION(lock)
+
+    threading.Lock = make_lock
+    threading.RLock = make_rlock
+    threading.Condition = make_condition
+    _active = witness
+    return witness
+
+
+def uninstall() -> None:
+    global _active
+    threading.Lock = _REAL_LOCK
+    threading.RLock = _REAL_RLOCK
+    threading.Condition = _REAL_CONDITION
+    _active = None

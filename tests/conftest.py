@@ -16,6 +16,24 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _lock_order_witness():
+    """Opt-in lockdep: REPRO_LOCK_WITNESS=1 wraps every lock created by
+    repro.* modules for the whole session and fails teardown if the
+    acquisition-order graph contains a cycle (potential deadlock, even if
+    no run ever deadlocked). Nightly runs the threaded test modules under
+    this; the default path patches nothing."""
+    if os.environ.get("REPRO_LOCK_WITNESS") != "1":
+        yield
+        return
+    from repro.statics import witness as _witness
+
+    wit = _witness.install()
+    yield
+    _witness.uninstall()
+    wit.assert_no_cycles()
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

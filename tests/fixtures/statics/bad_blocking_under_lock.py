@@ -1,0 +1,21 @@
+"""Seeded violation: blocking calls inside a 'with lock:' body."""
+
+import threading
+import time
+
+
+class BlockingUnderLock:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def sleepy(self):
+        with self._lock:
+            time.sleep(0.1)  # <- blocking-call-under-lock
+
+    def waits_on_future(self, fut):
+        with self._lock:
+            return fut.result()  # <- blocking-call-under-lock
+
+    def polls_future(self, fut):
+        with self._lock:
+            return fut.result(timeout=0)  # non-blocking poll: allowed

@@ -1,0 +1,18 @@
+"""Seeded violations: a leaked future and a double-settled future."""
+
+from concurrent.futures import Future
+
+
+def leaky(flag: bool) -> None:
+    fut = Future()  # <- future-leak: flag=False path never settles it
+    if flag:
+        fut.set_result(1)
+    return None
+
+
+def double(flag: bool) -> None:
+    fut = Future()  # <- future-double-settle on the flag=True path
+    fut.set_result(1)
+    if flag:
+        fut.set_result(2)
+    return None

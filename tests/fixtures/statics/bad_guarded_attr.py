@@ -1,0 +1,22 @@
+"""Seeded violation: guarded attribute touched outside its lock.
+
+The class deliberately shadows the real ``BatchScheduler`` name so the
+analyzer's default guarded-attribute registry (``_queues`` -> ``_cond``)
+applies to it.
+"""
+
+import threading
+from collections import deque
+
+
+class BatchScheduler:
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._queues = {"default": deque()}
+
+    def qsize_atomic(self):
+        with self._cond:
+            return sum(len(q) for q in self._queues.values())
+
+    def qsize_torn(self):
+        return sum(len(q) for q in self._queues.values())  # <- guarded-attr-outside-lock

@@ -1,0 +1,19 @@
+"""Seeded violation: *_locked method called outside any lock block."""
+
+import threading
+
+
+class LeakyQueue:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []
+
+    def _pop_locked(self):
+        return self._items.pop() if self._items else None
+
+    def take_safely(self):
+        with self._lock:
+            return self._pop_locked()
+
+    def take_racy(self):
+        return self._pop_locked()  # <- locked-call-outside-lock

@@ -1,0 +1,13 @@
+"""Seeded violation: host numpy arrays captured/built inside a kernel."""
+
+import numpy as np
+from jax.experimental import pallas as pl
+
+_TABLE = np.arange(16)
+
+
+def _closure_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    o_ref[i] = x_ref[i] * _TABLE[0]  # <- pallas-closure-numpy (module array)
+    scale = np.ones((8,))  # <- pallas-closure-numpy (built in kernel)
+    o_ref[0] = scale[0]

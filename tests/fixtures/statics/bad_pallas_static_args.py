@@ -1,0 +1,22 @@
+"""Seeded violation: non-array params missing from static_argnames."""
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def copy_call(x, n_rows: int, *, f_tile=128, interpret=True):
+    # n_rows (annotated int) and f_tile (int default) would trace as
+    # dynamic values <- pallas-static-args x2
+    del n_rows, f_tile
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

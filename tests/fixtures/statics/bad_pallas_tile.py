@@ -1,0 +1,19 @@
+"""Seeded violation: BlockSpec tile does not divide the padded out dim."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def tiled_copy(x):
+    return pl.pallas_call(
+        _tile_kernel,
+        grid=(3,),
+        out_shape=jax.ShapeDtypeStruct((96, 100), jnp.float32),
+        # 100 % 64 != 0 <- pallas-tile-divisibility
+        out_specs=pl.BlockSpec((32, 64), lambda i: (i, 0)),
+    )(x)

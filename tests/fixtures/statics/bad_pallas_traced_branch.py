@@ -1,0 +1,9 @@
+"""Seeded violation: Python `if` on a traced value inside a kernel."""
+
+from jax.experimental import pallas as pl
+
+
+def _branch_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    if i > 0:  # <- pallas-traced-branch: i is abstract at trace time
+        o_ref[i] = x_ref[i]

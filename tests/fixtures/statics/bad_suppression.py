@@ -1,0 +1,15 @@
+"""Seeded violation: a suppression with no reason string.  It must not
+suppress (the blocking finding still fires) and must itself raise
+``bad-suppression``."""
+
+import threading
+import time
+
+
+class BadSuppression:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def tick(self):
+        with self._lock:
+            time.sleep(0)  # statics: ignore[blocking-call-under-lock]

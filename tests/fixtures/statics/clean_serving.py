@@ -1,0 +1,33 @@
+"""Clean fixture: correct lock discipline and future settlement — the
+analyzer must report nothing here."""
+
+import threading
+import time
+from concurrent.futures import Future
+
+
+class TinyQueue:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []
+
+    def _pop_locked(self):
+        return self._items.pop() if self._items else None
+
+    def take(self):
+        with self._lock:
+            return self._pop_locked()
+
+    def put(self, item):
+        with self._lock:
+            self._items.append(item)
+        time.sleep(0)  # blocking OUTSIDE the lock is fine
+
+
+def settled(flag: bool) -> None:
+    fut = Future()
+    if flag:
+        fut.set_result(1)
+    else:
+        fut.cancel()
+    return None

@@ -1,0 +1,14 @@
+"""Well-formed suppression: the violation is acknowledged with a reason,
+so the analyzer must report nothing."""
+
+import threading
+import time
+
+
+class SuppressedSleeper:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def tick(self):
+        with self._lock:
+            time.sleep(0)  # statics: ignore[blocking-call-under-lock] -- fixture: exercises the suppression syntax end to end

@@ -301,7 +301,7 @@ def test_cancel_hammer_invariant_and_worker_survival():
     hammer_t = threading.Thread(target=hammer)
     hammer_t.start()
     try:
-        for round_ in range(30):
+        for _round in range(30):
             items = sched.submit_many(list(range(8)))
             with items_lock:
                 all_items.extend(items)
